@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks: the Eclat support-counting hot spot.
+
+CPU wall times compare the pure-jnp reference against the MXU-form (unpacked
+dot) — on CPU this measures the *algorithmic* reformulation only; the Pallas
+kernels themselves are validated in interpret mode (tests) and their VMEM
+working sets are reported structurally here.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import bitmap as bm  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+
+
+def _time(f, *args, reps=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(fast: bool = False):
+    shapes = [(4096, 128), (16384, 256)] if not fast else [(4096, 128)]
+    rows = []
+    for n_tx, n_items in shapes:
+        rng = np.random.default_rng(0)
+        dense = rng.random((n_tx, n_items)) < 0.2
+        db = bm.BitmapDB.from_dense(jnp.asarray(dense))
+        tid = db.all_tids()
+
+        ext = jax.jit(ref.extension_supports_ref)
+        us_ext = _time(ext, db.item_bits, tid)
+        pair_v = jax.jit(ref.pair_supports_ref)
+        us_pv = _time(pair_v, db.item_bits, tid)
+        pair_m = jax.jit(ref.pair_supports_mxu_ref)
+        us_pm = _time(pair_m, db.item_bits, tid)
+        w = db.item_bits.shape[1]
+        vmem_ext = 256 * min(512, w) * 4 / 1024
+        rows.append((n_tx, n_items, us_ext, us_pv, us_pm))
+        print(f"kernels.extension_supports[{n_tx}x{n_items}],{us_ext:.1f},"
+              f"vmem_tile_KiB={vmem_ext:.0f}")
+        print(f"kernels.pair_supports_vpu[{n_tx}x{n_items}],{us_pv:.1f},")
+        print(f"kernels.pair_supports_mxu[{n_tx}x{n_items}],{us_pm:.1f},"
+              f"speedup_vs_vpu={us_pv/us_pm:.2f}x", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run(fast="--fast" in sys.argv)

@@ -1,0 +1,60 @@
+"""Benchmark orchestrator — one section per thesis table/figure family.
+
+  speedup      → §11.4 Tables 11.3–11.14   (three Parallel-FIMI variants)
+  pbec         → §11.3 Figs 11.1–11.12     (double-sampling estimation error)
+  replication  → §11.5 Tables 11.15–11.21  (LPT vs DB-Repl-Min)
+  kernels      → Eclat support-counting hot spot (B.3.1)
+  roofline     → EXPERIMENTS.md §Roofline  (reads results/dryrun/*.json)
+
+``python -m benchmarks.run [--full] [--only NAME]``.  Prints
+``name,us_per_call,derived`` CSV lines where applicable.  Defaults to the
+fast variant so the whole suite stays CPU-friendly.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+    fast = not args.full
+
+    sections = ["kernels", "speedup", "pbec", "replication", "roofline"]
+    if args.only:
+        sections = [args.only]
+
+    for name in sections:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.perf_counter()
+        if name == "kernels":
+            from benchmarks import kernels
+
+            kernels.run(fast=fast)
+        elif name == "speedup":
+            from benchmarks import speedup
+
+            rows = speedup.run(fast=fast)
+            speedup.summarize(rows)
+        elif name == "pbec":
+            from benchmarks import pbec_estimation
+
+            pbec_estimation.run(fast=fast)
+        elif name == "replication":
+            from benchmarks import replication
+
+            replication.run(fast=fast)
+        elif name == "roofline":
+            from benchmarks import roofline
+
+            rows = roofline.full_table("single")
+            print(roofline.render_markdown(rows))
+        print(f"[{name}: {time.perf_counter()-t0:.1f}s]", flush=True)
+
+
+if __name__ == "__main__":
+    main()

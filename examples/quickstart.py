@@ -1,0 +1,45 @@
+"""Quickstart: mine frequent itemsets from a synthetic market-basket database.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm, eclat
+from repro.data.ibm_gen import IBMParams, generate_dense
+
+
+def main():
+    params = IBMParams(n_tx=2048, n_items=40, n_patterns=25,
+                       avg_pattern_len=6, avg_tx_len=10, seed=0)
+    dense = generate_dense(params)
+    db = bm.BitmapDB.from_dense(jnp.asarray(dense))
+    min_support = int(0.05 * params.n_tx)
+    print(f"database {params.name}: {params.n_tx} transactions, "
+          f"{params.n_items} items, min_support={min_support}")
+
+    res = eclat.mine_all(
+        db, min_support,
+        config=eclat.EclatConfig(max_out=1 << 14, max_stack=4096),
+    )
+    n = int(res.n_out)
+    print(f"|F| = {int(res.n_total)} frequent itemsets "
+          f"({int(res.n_iters)} DFS node expansions, overflow={int(res.stack_overflow)})")
+
+    supports = np.asarray(res.supports[:n])
+    order = np.argsort(-supports)[:10]
+    print("top itemsets by support:")
+    for k in order:
+        mask = np.asarray(bm.unpack_bool(res.items[k], params.n_items))
+        items = np.nonzero(mask)[0].tolist()
+        print(f"  {items}  supp={supports[k]} ({supports[k]/params.n_tx:.1%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Serve a small model with batched requests + KV cache (driver example).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch minicpm3-4b
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import serve
+
+
+if __name__ == "__main__":
+    if "--smoke" not in sys.argv:
+        sys.argv += ["--smoke"]
+    serve.main()

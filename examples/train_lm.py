@@ -1,0 +1,21 @@
+"""Train an LM end-to-end with checkpoint/restart (driver example).
+
+Reduced config by default so it runs on CPU in minutes; pass --full --arch X
+on real hardware.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 120
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import train
+
+
+if __name__ == "__main__":
+    if "--full" not in sys.argv:
+        sys.argv += ["--smoke"]
+    else:
+        sys.argv.remove("--full")
+    train.main()

@@ -1,0 +1,27 @@
+"""--arch id → config module registry (all 10 assigned architectures)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+ARCHS: Dict[str, str] = {
+    "granite-20b": "repro.configs.granite_20b",
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "llama3.2-3b": "repro.configs.llama3_2_3b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "whisper-small": "repro.configs.whisper_small",
+}
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = importlib.import_module(ARCHS[arch])
+    return mod.smoke() if smoke else mod.config()
+
+
+def all_archs():
+    return list(ARCHS)

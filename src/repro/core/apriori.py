@@ -1,0 +1,128 @@
+"""Apriori (§B.1) + the Count-Distribution parallel baseline (Alg. 2, §5.2.1).
+
+The thesis compares its method against Apriori-family parallel algorithms; we
+implement them as the baseline the instructions require.  Level-wise BFS:
+candidate generation/pruning is host control plane (inherently bulk-
+synchronous — each level is a barrier even in the original), support counting
+is a device kernel over packed bitmaps, chunked to bound memory.
+
+Count distribution (Alg. 2): every processor counts all candidates on its own
+DB shard and the counts are all-reduced — in JAX that is literally a ``psum``
+over the miner axis, executed by :func:`count_distribution_supports` under
+``shard_map``/``vmap``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, FrozenSet, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmap as bm
+
+_U32 = jnp.uint32
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def count_supports(
+    item_bits: jnp.ndarray,   # uint32[I, W]
+    cand_masks: jnp.ndarray,  # bool [N, I]
+    valid_tid: jnp.ndarray,   # uint32[W]
+    chunk: int = 256,
+) -> jnp.ndarray:
+    """Supports of N candidate itemsets (int32[N]), chunked over candidates.
+
+    tid(U) = ~ OR_{i∈U} ~bits_i  (De Morgan form of the AND-reduce) — one
+    masked OR-einsum per chunk keeps peak memory at [chunk, W].
+    """
+    N = cand_masks.shape[0]
+    pad = (-N) % chunk
+    cands = jnp.concatenate(
+        [cand_masks, jnp.zeros((pad, cand_masks.shape[1]), cand_masks.dtype)]
+    )
+    neg = ~item_bits  # [I, W]
+
+    def one_chunk(c):  # bool [chunk, I]
+        sel = c.astype(_U32)  # [chunk, I]
+        # OR over items of (mask ? ~bits : 0): multiply-as-select then OR-reduce
+        picked = sel[:, :, None] * neg[None, :, :]
+        ored = jax.lax.reduce(
+            picked, _U32(0), lambda a, b: jnp.bitwise_or(a, b), (1,)
+        )
+        tid = (~ored) & valid_tid[None, :]
+        return bm.popcount_u32(tid).sum(axis=-1)
+
+    chunks = cands.reshape(-1, chunk, cand_masks.shape[1])
+    supports = jax.lax.map(one_chunk, chunks).reshape(-1)
+    return supports[:N]
+
+
+def generate_candidates(frequent: List[FrozenSet[int]]) -> List[FrozenSet[int]]:
+    """Generate-Candidates (Alg. 24): join F_{k-1} pairs sharing a (k-2)-prefix,
+    prune candidates with an infrequent (k-1)-subset."""
+    fset = set(frequent)
+    if not frequent:
+        return []
+    k = len(next(iter(frequent)))
+    by_prefix: Dict[Tuple[int, ...], List[Tuple[int, ...]]] = {}
+    for f in frequent:
+        t = tuple(sorted(f))
+        by_prefix.setdefault(t[:-1], []).append(t)
+    cands = set()
+    for pre, group in by_prefix.items():
+        group = sorted(group)
+        for a in range(len(group)):
+            for b in range(a + 1, len(group)):
+                u = frozenset(group[a]) | frozenset(group[b])
+                if len(u) != k + 1:
+                    continue
+                if all(u - {x} in fset for x in u):
+                    cands.add(u)
+    return sorted(cands, key=lambda s: tuple(sorted(s)))
+
+
+def apriori(db: bm.BitmapDB, min_support: int) -> Dict[FrozenSet[int], int]:
+    """Sequential Apriori (Alg. 25) over a BitmapDB.  Host loop over levels."""
+    I = db.n_items
+    valid = db.all_tids()
+    out: Dict[FrozenSet[int], int] = {}
+    # level 1
+    supp1 = np.asarray(
+        bm.extension_supports(db.item_bits, valid)
+    )
+    frequent = [frozenset([i]) for i in range(I) if supp1[i] >= min_support]
+    for f in frequent:
+        out[f] = int(supp1[next(iter(f))])
+    while frequent:
+        cands = generate_candidates(frequent)
+        if not cands:
+            break
+        masks = np.zeros((len(cands), I), dtype=bool)
+        for r, c in enumerate(cands):
+            masks[r, list(c)] = True
+        supports = np.asarray(
+            count_supports(db.item_bits, jnp.asarray(masks), valid)
+        )
+        frequent = []
+        for c, s in zip(cands, supports):
+            if s >= min_support:
+                out[c] = int(s)
+                frequent.append(c)
+    return out
+
+
+def count_distribution_supports(
+    local_item_bits: jnp.ndarray,
+    cand_masks: jnp.ndarray,
+    local_valid_tid: jnp.ndarray,
+    axis_name: str,
+) -> jnp.ndarray:
+    """One Count-Distribution level: local count + all-reduce (Alg. 2 line 10).
+
+    Runs under shard_map/vmap with ``axis_name`` bound; each shard holds its
+    database partition D_i as vertical bitmaps over *local* transactions.
+    """
+    local = count_supports(local_item_bits, cand_masks, local_valid_tid)
+    return jax.lax.psum(local, axis_name)

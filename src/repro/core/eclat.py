@@ -1,0 +1,347 @@
+"""Eclat in JAX: depth-first FI mining over packed-bitmap tidlists.
+
+This is the TPU-native re-expression of the thesis' Eclat (§B.3, Alg. 34/35)
+used as the Phase-4 sequential miner and (on the database sample) as the
+Phase-1 FI enumerator feeding the reservoir sampler.
+
+Adaptation (see DESIGN.md):
+  * recursion → ``lax.while_loop`` over a fixed-capacity explicit stack;
+  * per-extension tidlist intersections → one batched AND+popcount sweep per
+    node (``extension_supports``), replaceable by the Pallas kernel;
+  * dynamic item re-ordering by support (§B.4.2) is kept: each node sorts its
+    frequent extensions ascending by support before splitting into child
+    PBECs (Prop. 2.23 keeps the classes disjoint for *any* per-node order);
+  * the (optional) reservoir sampler runs *inside* the mining loop: the FI
+    stream never leaves the device (Alg. 9 / Vitter, §6.2.2).
+
+All shapes are static; overflow of the stack or output buffer is counted and
+reported, never silently dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+
+_U32 = jnp.uint32
+
+
+@dataclasses.dataclass(frozen=True)
+class EclatConfig:
+    """Static configuration of the DFS miner."""
+
+    max_out: int = 4096          # capacity of the FI output buffer
+    max_stack: int = 1024        # DFS stack capacity
+    max_iters: int = 1 << 20     # hard bound on loop trips (≥ |F|+1)
+    reservoir_size: int = 0      # >0 enables the in-loop reservoir sampler
+    count_only: bool = False     # skip writing the FI buffer (Phase-1 f_i count)
+
+
+class EclatResult(NamedTuple):
+    """Mining result; buffers are only valid up to their counts."""
+
+    items: jnp.ndarray       # uint32[max_out, IW] packed itemset masks
+    supports: jnp.ndarray    # int32[max_out]
+    n_out: jnp.ndarray       # int32 — number of FIs written (≤ max_out)
+    n_total: jnp.ndarray     # int32 — number of FIs *found* (may exceed max_out)
+    stack_overflow: jnp.ndarray  # int32 — dropped pushes (0 ⇒ complete result)
+    reservoir_items: jnp.ndarray     # uint32[R, IW]
+    reservoir_supports: jnp.ndarray  # int32[R]
+    n_iters: jnp.ndarray     # int32 — loop trips executed
+
+
+class _State(NamedTuple):
+    sp: jnp.ndarray
+    stk_items: jnp.ndarray   # uint32[S, IW]
+    stk_ext: jnp.ndarray     # uint32[S, IW]
+    stk_tid: jnp.ndarray     # uint32[S, W]
+    out_items: jnp.ndarray
+    out_supp: jnp.ndarray
+    n_out: jnp.ndarray
+    n_total: jnp.ndarray
+    overflow: jnp.ndarray
+    res_items: jnp.ndarray
+    res_supp: jnp.ndarray
+    res_seen: jnp.ndarray    # t in Algorithm R
+    key: jax.Array
+    it: jnp.ndarray
+
+
+SupportFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def _reservoir_update(state, itemsets_packed, supports, emit_mask, R):
+    """Algorithm R over the ≤I itemsets emitted this node (sequential fori)."""
+
+    def body(i, carry):
+        res_items, res_supp, seen, key = carry
+
+        def do(carry):
+            res_items, res_supp, seen, key = carry
+            seen = seen + 1
+            key, sub = jax.random.split(key)
+            j = jax.random.randint(sub, (), 0, seen)
+            slot = jnp.where(seen <= R, seen - 1, j)
+            take = (seen <= R) | (j < R)
+            slot = jnp.where(take, slot, R)  # R = out-of-bounds ⇒ drop
+            res_items = res_items.at[slot].set(itemsets_packed[i], mode="drop")
+            res_supp = res_supp.at[slot].set(supports[i], mode="drop")
+            return res_items, res_supp, seen, key
+
+        return jax.lax.cond(emit_mask[i], do, lambda c: c, carry)
+
+    return jax.lax.fori_loop(0, emit_mask.shape[0], body, state)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("config", "n_items", "support_fn"),
+)
+def mine_seeded(
+    item_bits: jnp.ndarray,
+    seed_prefix: jnp.ndarray,   # bool [K, I]
+    seed_ext: jnp.ndarray,      # bool [K, I]
+    seed_tid: jnp.ndarray,      # uint32 [K, W]
+    seed_valid: jnp.ndarray,    # bool [K]
+    min_support: jnp.ndarray,
+    key: jax.Array,
+    *,
+    config: EclatConfig,
+    n_items: int,
+    support_fn: Optional[SupportFn] = None,
+) -> EclatResult:
+    """Mine all FIs in the union of K PBECs ``[prefix_k | ext_k]``.
+
+    This is `Exec-Eclat` (thesis Alg. 21): a processor's assigned classes are
+    the DFS seeds; the `Prepare-Tidlists` branch simulation of Ch. 9 becomes
+    "caller passes T(U_k)" (computed in one batched AND-reduce).  The prefixes
+    U_k themselves are *not* emitted (Phase 4 handles prefix supports via the
+    side channel, Alg. 19 line 2).
+    """
+    if support_fn is None:
+        support_fn = bm.extension_supports
+    I = n_items
+    IW = bm.n_words(I)
+    W = item_bits.shape[-1]
+    S, O, R = config.max_stack, config.max_out, max(config.reservoir_size, 1)
+    K = seed_prefix.shape[0]
+    assert K <= S, "seed count exceeds stack capacity"
+
+    # Compact valid seeds to the bottom of the stack.
+    seed_valid = seed_valid.astype(jnp.bool_)
+    rank = jnp.cumsum(seed_valid) - 1
+    pos = jnp.where(seed_valid, rank, S)
+    n_seeds = seed_valid.sum().astype(jnp.int32)
+
+    init = _State(
+        sp=n_seeds,
+        stk_items=jnp.zeros((S, IW), _U32)
+        .at[pos]
+        .set(bm.pack_bool(seed_prefix.astype(jnp.bool_)), mode="drop"),
+        stk_ext=jnp.zeros((S, IW), _U32)
+        .at[pos]
+        .set(bm.pack_bool(seed_ext.astype(jnp.bool_)), mode="drop"),
+        stk_tid=jnp.zeros((S, W), _U32).at[pos].set(seed_tid, mode="drop"),
+        out_items=jnp.zeros((O, IW), _U32),
+        out_supp=jnp.zeros((O,), jnp.int32),
+        n_out=jnp.asarray(0, jnp.int32),
+        n_total=jnp.asarray(0, jnp.int32),
+        overflow=jnp.asarray(0, jnp.int32),
+        res_items=jnp.zeros((R, IW), _U32),
+        res_supp=jnp.zeros((R,), jnp.int32),
+        res_seen=jnp.asarray(0, jnp.int32),
+        key=key,
+        it=jnp.asarray(0, jnp.int32),
+    )
+
+    def cond(s: _State):
+        return (s.sp > 0) & (s.it < config.max_iters)
+
+    def body(s: _State) -> _State:
+        sp = s.sp - 1
+        node_items = s.stk_items[sp]          # uint32[IW]
+        node_ext = s.stk_ext[sp]              # uint32[IW]
+        node_tid = s.stk_tid[sp]              # uint32[W]
+        ext_bool = bm.unpack_bool(node_ext, I)
+
+        # --- batched support counting (the Pallas-accelerated hot spot) -----
+        supports = support_fn(item_bits, node_tid)          # int32[I]
+        freq = ext_bool & (supports >= min_support)
+        nf = freq.sum().astype(jnp.int32)
+
+        # --- dynamic re-ordering: rank frequent extensions by support ------
+        sort_key = jnp.where(freq, supports, jnp.iinfo(jnp.int32).max)
+        order = jnp.argsort(sort_key)                        # frequent first, asc
+        rank = jnp.argsort(order)                            # rank per item
+        # rank < nf  ⇔  item is a frequent extension.
+
+        # --- emit FIs: prefix ∪ {e} for each frequent e ---------------------
+        e_packed = bm.pack_bool(jax.nn.one_hot(jnp.arange(I), I, dtype=jnp.bool_))
+        child_items = node_items[None, :] | e_packed         # [I, IW]
+        out_pos = jnp.where(freq, s.n_out + rank, O)         # O ⇒ dropped
+        if not config.count_only:
+            out_items = s.out_items.at[out_pos].set(child_items, mode="drop")
+            out_supp = s.out_supp.at[out_pos].set(supports, mode="drop")
+        else:
+            out_items, out_supp = s.out_items, s.out_supp
+        n_out = jnp.minimum(s.n_out + nf, O)
+        n_total = s.n_total + nf
+
+        # --- reservoir over the emitted stream ------------------------------
+        if config.reservoir_size > 0:
+            res_items, res_supp, res_seen, key = _reservoir_update(
+                (s.res_items, s.res_supp, s.res_seen, s.key),
+                child_items,
+                supports,
+                freq,
+                config.reservoir_size,
+            )
+        else:
+            res_items, res_supp, res_seen, key = (
+                s.res_items,
+                s.res_supp,
+                s.res_seen,
+                s.key,
+            )
+
+        # --- push child PBECs ------------------------------------------------
+        # Child of extension e keeps extensions with larger rank (Prop. 2.23).
+        later = rank[None, :] > rank[:, None]                # [I(child e), I(f)]
+        child_ext_bool = later & freq[None, :]
+        child_ext = bm.pack_bool(child_ext_bool)             # [I, IW]
+        child_tid = item_bits & node_tid[None, :]            # [I, W]
+        # Push only children that themselves have ≥1 extension *or* not — every
+        # frequent child is pushed; leaves pop with zero frequent extensions and
+        # cost one cheap iteration.  (Skipping empty-ext leaves halves the trip
+        # count; do it: children with no extensions need no node of their own.)
+        has_ext = child_ext_bool.any(axis=-1)
+        push = freq & has_ext
+        n_push = push.sum().astype(jnp.int32)
+        push_rank = jnp.cumsum(push) - 1                     # 0..n_push-1
+        stack_pos = jnp.where(push, sp + push_rank, S)       # S ⇒ dropped
+        dropped = jnp.maximum(sp + n_push - S, 0)
+        stk_items = s.stk_items.at[stack_pos].set(child_items, mode="drop")
+        stk_ext = s.stk_ext.at[stack_pos].set(child_ext, mode="drop")
+        stk_tid = s.stk_tid.at[stack_pos].set(child_tid, mode="drop")
+        sp_new = jnp.minimum(sp + n_push, S)
+
+        return _State(
+            sp=sp_new,
+            stk_items=stk_items,
+            stk_ext=stk_ext,
+            stk_tid=stk_tid,
+            out_items=out_items,
+            out_supp=out_supp,
+            n_out=n_out,
+            n_total=n_total,
+            overflow=s.overflow + dropped,
+            res_items=res_items,
+            res_supp=res_supp,
+            res_seen=res_seen,
+            key=key,
+            it=s.it + 1,
+        )
+
+    final = jax.lax.while_loop(cond, body, init)
+    return EclatResult(
+        items=final.out_items,
+        supports=final.out_supp,
+        n_out=final.n_out,
+        n_total=final.n_total,
+        stack_overflow=final.overflow,
+        reservoir_items=final.res_items,
+        reservoir_supports=final.res_supp,
+        n_iters=final.it,
+    )
+
+
+def mine(
+    item_bits: jnp.ndarray,
+    prefix_mask: jnp.ndarray,
+    ext_mask: jnp.ndarray,
+    prefix_tid: jnp.ndarray,
+    min_support: jnp.ndarray,
+    key: jax.Array,
+    *,
+    config: EclatConfig,
+    n_items: int,
+    support_fn: Optional[SupportFn] = None,
+) -> EclatResult:
+    """Single-PBEC convenience wrapper over :func:`mine_seeded`."""
+    return mine_seeded(
+        item_bits,
+        prefix_mask[None, :],
+        ext_mask[None, :],
+        prefix_tid[None, :],
+        jnp.ones((1,), jnp.bool_),
+        min_support,
+        key,
+        config=config,
+        n_items=n_items,
+        support_fn=support_fn,
+    )
+
+
+def mine_all(
+    db: bm.BitmapDB,
+    min_support,
+    key: Optional[jax.Array] = None,
+    *,
+    config: EclatConfig = EclatConfig(),
+    support_fn: Optional[SupportFn] = None,
+) -> EclatResult:
+    """Mine *all* FIs of a database (root PBEC [∅ | B])."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    I = db.n_items
+    return mine(
+        db.item_bits,
+        jnp.zeros((I,), jnp.bool_),
+        jnp.ones((I,), jnp.bool_),
+        db.all_tids(),
+        jnp.asarray(min_support, jnp.int32),
+        key,
+        config=config,
+        n_items=I,
+        support_fn=support_fn,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side oracle: brute-force FI mining for tests (exponential, tiny DBs).
+# ---------------------------------------------------------------------------
+
+
+def brute_force_fis(dense, min_support: int):
+    """All frequent itemsets of a dense bool matrix, as {frozenset: support}."""
+    import itertools
+
+    import numpy as np
+
+    dense = np.asarray(dense)
+    n_tx, n_items = dense.shape
+    out = {}
+    frontier = []
+    for i in range(n_items):
+        s = int(dense[:, i].sum())
+        if s >= min_support:
+            out[frozenset([i])] = s
+            frontier.append((frozenset([i]), dense[:, i]))
+    while frontier:
+        nxt = []
+        for items, cover in frontier:
+            last = max(items)
+            for j in range(last + 1, n_items):
+                cov = cover & dense[:, j]
+                s = int(cov.sum())
+                if s >= min_support:
+                    ns = items | {j}
+                    out[frozenset(ns)] = s
+                    nxt.append((frozenset(ns), cov))
+        frontier = nxt
+    return out

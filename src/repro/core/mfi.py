@@ -1,0 +1,224 @@
+"""DFS mining of (candidates on) maximal frequent itemsets — thesis Ch. 7.
+
+Implements the DFS-MFI-Schema (Alg. 10) on packed bitmaps: a frequent itemset
+is a *candidate on an MFI* (Def. 7.1) iff none of its extensions is frequent.
+Run over a subset of the 1-prefix PBECs this yields per-processor sets ``M_i``
+whose union M satisfies ``M̃ ⊆ M ⊆ F̃`` with ``|M| ≤ min(P,|W|)·|M̃|``
+(Thm. 7.5) — exactly the Parallel-FIMI-Par Phase-1 object.  A post-pass
+(:func:`filter_maximal`) recovers the exact MFI set M̃ when run globally
+(Parallel-FIMI-Seq Phase 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+
+_U32 = jnp.uint32
+
+
+@dataclasses.dataclass(frozen=True)
+class MFIConfig:
+    max_out: int = 2048
+    max_stack: int = 1024
+    max_iters: int = 1 << 20
+
+
+class MFIResult(NamedTuple):
+    items: jnp.ndarray      # uint32[max_out, IW] candidate itemset masks
+    supports: jnp.ndarray   # int32[max_out]
+    n_out: jnp.ndarray      # int32
+    overflow: jnp.ndarray   # int32 (stack + output drops; 0 ⇒ complete)
+    n_iters: jnp.ndarray
+
+
+class _State(NamedTuple):
+    sp: jnp.ndarray
+    stk_items: jnp.ndarray
+    stk_ext: jnp.ndarray
+    stk_tid: jnp.ndarray
+    stk_supp: jnp.ndarray
+    out_items: jnp.ndarray
+    out_supp: jnp.ndarray
+    n_out: jnp.ndarray
+    overflow: jnp.ndarray
+    it: jnp.ndarray
+
+
+@partial(jax.jit, static_argnames=("config", "n_items", "support_fn"))
+def mine_candidates_seeded(
+    item_bits: jnp.ndarray,
+    seed_prefix: jnp.ndarray,    # bool [K, I]
+    seed_ext: jnp.ndarray,       # bool [K, I]
+    seed_tid: jnp.ndarray,       # uint32 [K, W]
+    seed_support: jnp.ndarray,   # int32 [K]
+    seed_valid: jnp.ndarray,     # bool [K]
+    min_support: jnp.ndarray,
+    *,
+    config: MFIConfig,
+    n_items: int,
+    support_fn=None,
+) -> MFIResult:
+    """All candidates-on-MFIs inside the union of K PBECs ``[prefix_k|ext_k]``.
+
+    ``seed_support`` is Supp(prefix_k) (used when the prefix itself turns out
+    to be a leaf).  A non-frequent / empty prefix with support 0 never emits.
+    """
+    if support_fn is None:
+        support_fn = bm.extension_supports
+    I = n_items
+    IW = bm.n_words(I)
+    W = item_bits.shape[-1]
+    S, O = config.max_stack, config.max_out
+    K = seed_prefix.shape[0]
+    assert K <= S
+
+    seed_valid = seed_valid.astype(jnp.bool_)
+    rank = jnp.cumsum(seed_valid) - 1
+    pos = jnp.where(seed_valid, rank, S)
+    n_seeds = seed_valid.sum().astype(jnp.int32)
+
+    init = _State(
+        sp=n_seeds,
+        stk_items=jnp.zeros((S, IW), _U32)
+        .at[pos]
+        .set(bm.pack_bool(seed_prefix.astype(jnp.bool_)), mode="drop"),
+        stk_ext=jnp.zeros((S, IW), _U32)
+        .at[pos]
+        .set(bm.pack_bool(seed_ext.astype(jnp.bool_)), mode="drop"),
+        stk_tid=jnp.zeros((S, W), _U32).at[pos].set(seed_tid, mode="drop"),
+        stk_supp=jnp.zeros((S,), jnp.int32).at[pos].set(seed_support, mode="drop"),
+        out_items=jnp.zeros((O, IW), _U32),
+        out_supp=jnp.zeros((O,), jnp.int32),
+        n_out=jnp.asarray(0, jnp.int32),
+        overflow=jnp.asarray(0, jnp.int32),
+        it=jnp.asarray(0, jnp.int32),
+    )
+
+    def cond(s):
+        return (s.sp > 0) & (s.it < config.max_iters)
+
+    def body(s: _State) -> _State:
+        sp = s.sp - 1
+        node_items = s.stk_items[sp]
+        node_ext = s.stk_ext[sp]
+        node_tid = s.stk_tid[sp]
+        node_supp = s.stk_supp[sp]
+        ext_bool = bm.unpack_bool(node_ext, I)
+
+        supports = support_fn(item_bits, node_tid)
+        freq = ext_bool & (supports >= min_support)
+        nf = freq.sum().astype(jnp.int32)
+
+        # The node is a candidate on an MFI iff frequent and no frequent ext.
+        node_nonempty = (node_items != 0).any()
+        is_cand = (nf == 0) & node_nonempty & (node_supp >= min_support)
+        pos = jnp.where(is_cand, s.n_out, O)
+        out_items = s.out_items.at[pos].set(node_items, mode="drop")
+        out_supp = s.out_supp.at[pos].set(node_supp, mode="drop")
+        n_out = s.n_out + is_cand.astype(jnp.int32)
+        out_drop = jnp.maximum(n_out - O, 0)
+        n_out = jnp.minimum(n_out, O)
+
+        # Children (ascending-support order, Prop. 2.23 keeps classes disjoint).
+        sort_key = jnp.where(freq, supports, jnp.iinfo(jnp.int32).max)
+        order = jnp.argsort(sort_key)
+        rank = jnp.argsort(order)
+        e_packed = bm.pack_bool(jax.nn.one_hot(jnp.arange(I), I, dtype=jnp.bool_))
+        child_items = node_items[None, :] | e_packed
+        later = rank[None, :] > rank[:, None]
+        child_ext = bm.pack_bool(later & freq[None, :])
+        child_tid = item_bits & node_tid[None, :]
+
+        push = freq  # every frequent child must be visited (leaves emit there)
+        n_push = push.sum().astype(jnp.int32)
+        push_rank = jnp.cumsum(push) - 1
+        stack_pos = jnp.where(push, sp + push_rank, S)
+        dropped = jnp.maximum(sp + n_push - S, 0)
+        return _State(
+            sp=jnp.minimum(sp + n_push, S),
+            stk_items=s.stk_items.at[stack_pos].set(child_items, mode="drop"),
+            stk_ext=s.stk_ext.at[stack_pos].set(child_ext, mode="drop"),
+            stk_tid=s.stk_tid.at[stack_pos].set(child_tid, mode="drop"),
+            stk_supp=s.stk_supp.at[stack_pos].set(supports, mode="drop"),
+            out_items=out_items,
+            out_supp=out_supp,
+            n_out=n_out,
+            overflow=s.overflow + dropped + out_drop,
+            it=s.it + 1,
+        )
+
+    f = jax.lax.while_loop(cond, body, init)
+    return MFIResult(f.out_items, f.out_supp, f.n_out, f.overflow, f.it)
+
+
+def mine_candidates(
+    item_bits,
+    prefix_mask,
+    ext_mask,
+    prefix_tid,
+    prefix_support,
+    min_support,
+    *,
+    config: MFIConfig,
+    n_items: int,
+    support_fn=None,
+) -> MFIResult:
+    """Single-PBEC convenience wrapper over :func:`mine_candidates_seeded`."""
+    return mine_candidates_seeded(
+        item_bits,
+        prefix_mask[None, :],
+        ext_mask[None, :],
+        prefix_tid[None, :],
+        jnp.asarray(prefix_support, jnp.int32)[None],
+        jnp.ones((1,), jnp.bool_),
+        min_support,
+        config=config,
+        n_items=n_items,
+        support_fn=support_fn,
+    )
+
+
+def mine_all_candidates(
+    db: bm.BitmapDB, min_support, *, config: MFIConfig = MFIConfig(), support_fn=None
+) -> MFIResult:
+    """Candidates-on-MFIs over the whole lattice (root PBEC [∅ | B])."""
+    I = db.n_items
+    return mine_candidates(
+        db.item_bits,
+        jnp.zeros((I,), jnp.bool_),
+        jnp.ones((I,), jnp.bool_),
+        db.all_tids(),
+        jnp.asarray(0, jnp.int32),
+        jnp.asarray(min_support, jnp.int32),
+        config=config,
+        n_items=I,
+        support_fn=support_fn,
+    )
+
+
+@partial(jax.jit, static_argnames=())
+def filter_maximal(items: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Keep only itemsets not strictly contained in another valid itemset.
+
+    Args:
+      items: ``uint32[N, IW]`` packed masks.
+      valid: bool ``[N]``.
+    Returns: bool ``[N]`` — valid AND maximal.  Applied to the global candidate
+    set this yields exactly M̃ (DFS-MFI-Schema line 5 as a post-pass; order-free
+    and SPMD-friendly, unlike the thesis' sequential check).
+    """
+    sub = bm.is_subset_packed(items[:, None, :], items[None, :, :])  # [N, N]
+    proper = sub & ~bm.is_subset_packed(items[None, :, :], items[:, None, :])
+    dominated = (proper & valid[None, :]).any(axis=1)
+    return valid & ~dominated
+
+
+def powerset_log2_sizes(items: jnp.ndarray, n_items: int) -> jnp.ndarray:
+    """|m| per packed mask — log2 |P(m)|, the coverage-algorithm weights."""
+    return bm.popcount_u32(items).sum(axis=-1)

@@ -1,0 +1,168 @@
+"""Prefix-based equivalence classes: membership, size estimation, Partition.
+
+Thesis §2.4 (Defs 2.20/2.21, Props 2.22/2.23) and Phase 2 (Alg. 15/17).
+
+A PBEC is stored as a pair of bool masks ``(prefix, ext)`` over the base set.
+With the recursive construction of Prop. 2.23, ``[U|Σ] = {U ∪ Y : ∅ ≠ Y ⊆ Σ}``
+— membership is three bitwise tests, independent of item order (each node may
+re-order its extensions; the classes stay disjoint).
+
+Phase-2 partitioning/scheduling is host-side control-plane code (numpy): it
+sees only the *sample* F̃s (thousands of packed masks), runs once per job, and
+its output (the PBEC table + assignment) is broadcast — exactly how a real
+launcher treats a scheduler.  Device code (estimation counts) stays in jnp.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+
+
+@dataclasses.dataclass
+class PBEC:
+    prefix: np.ndarray       # bool [I]
+    ext: np.ndarray          # bool [I]
+    est_count: float         # |[U|Σ] ∩ F̃s| (absolute sample count)
+    seq: Tuple[int, ...] = ()  # order in which prefix items were added (DFS path)
+
+    @property
+    def depth(self) -> int:
+        return int(self.prefix.sum())
+
+
+def member_mask(
+    sample_masks: np.ndarray,  # bool [N, I]
+    prefix: np.ndarray,
+    ext: np.ndarray,
+) -> np.ndarray:
+    """bool [N]: which sample itemsets lie in [prefix | ext]."""
+    has_prefix = ~(prefix[None, :] & ~sample_masks).any(axis=1)
+    inside = ~(sample_masks & ~(prefix | ext)[None, :]).any(axis=1)
+    proper = (sample_masks & ~prefix[None, :]).any(axis=1)  # exclude W == U
+    return has_prefix & inside & proper
+
+
+def estimate_size(sample_masks: np.ndarray, prefix, ext) -> int:
+    return int(member_mask(sample_masks, prefix, ext).sum())
+
+
+SupportFn = Callable[[np.ndarray], np.ndarray]
+# maps a prefix bool[I] -> supports of prefix ∪ {b} for all b, int[I]
+
+
+def partition(
+    sample_masks: np.ndarray,      # bool [N, I] — the F̃s sample
+    n_processors: int,
+    alpha: float,
+    ext_supports: SupportFn,
+    n_items: int,
+    max_classes: int = 4096,
+) -> List[PBEC]:
+    """Alg. 17 (Phase-2-FI-Partitioning) + Alg. 15 (Partition).
+
+    Starts from the 1-prefix classes [{b}|{b'>b}], recursively splits any class
+    whose estimated relative size exceeds ``α/P``, ordering each split's
+    extensions by support in D̃ ascending (§B.4.2 dynamic re-ordering — the
+    order the Phase-4 sequential miner will use).
+    """
+    N = max(len(sample_masks), 1)
+    threshold = alpha * N / n_processors
+    I = n_items
+
+    # Initial split of the root: order items by support ascending (the same
+    # rule Partition applies recursively), then Σ_k = items after b_k.
+    root_supp = ext_supports(np.zeros(I, dtype=bool))
+    order = np.argsort(root_supp, kind="stable")
+    classes: List[PBEC] = []
+    work: List[PBEC] = []
+    for pos, b in enumerate(order):
+        prefix = np.zeros(I, dtype=bool)
+        prefix[b] = True
+        ext = np.zeros(I, dtype=bool)
+        ext[order[pos + 1:]] = True
+        s = estimate_size(sample_masks, prefix, ext)
+        # the singleton {b} itself belongs to this processor's share
+        s_with_self = s + int(
+            member_self(sample_masks, prefix)
+        )
+        work.append(PBEC(prefix, ext, s_with_self, seq=(int(b),)))
+
+    while work:
+        c = work.pop()
+        if c.est_count <= threshold or not c.ext.any() or (
+            len(classes) + len(work) >= max_classes
+        ):
+            classes.append(c)
+            continue
+        # Alg. 15: split [U|Σ] on U∪{b}, b ∈ Σ in ascending-support order.
+        supp = ext_supports(c.prefix)
+        ext_items = np.nonzero(c.ext)[0]
+        ext_sorted = ext_items[np.argsort(supp[ext_items], kind="stable")]
+        for pos, b in enumerate(ext_sorted):
+            prefix = c.prefix.copy()
+            prefix[b] = True
+            ext = np.zeros(I, dtype=bool)
+            ext[ext_sorted[pos + 1:]] = True
+            s = estimate_size(sample_masks, prefix, ext)
+            s += int(member_self(sample_masks, prefix))
+            work.append(PBEC(prefix, ext, s, seq=c.seq + (int(b),)))
+        # Note: the parent prefix U itself ({V} in Prop. 2.23) stays with the
+        # processor that gets the first child; its weight is 1 sample at most
+        # and Phase 4 computes prefix supports separately (Alg. 19 line 2).
+    return classes
+
+
+def member_self(sample_masks: np.ndarray, prefix: np.ndarray) -> int:
+    """# sample itemsets exactly equal to the prefix."""
+    return int((sample_masks == prefix[None, :]).all(axis=1).sum())
+
+
+def verify_disjoint_cover(
+    classes: Sequence[PBEC], n_items: int, universe_masks: np.ndarray
+) -> Tuple[bool, bool]:
+    """Property check: classes are pairwise disjoint and cover every non-empty
+    itemset except bare prefixes' strict subsets... precisely: every itemset in
+    ``universe_masks`` (bool [N, I], non-empty) is in exactly one class OR is
+    equal to some class prefix's proper prefix chain.
+
+    Returns (disjoint, covered) summary booleans; used by hypothesis tests.
+    """
+    N = len(universe_masks)
+    counts = np.zeros(N, dtype=np.int64)
+    for c in classes:
+        counts += member_mask(universe_masks, c.prefix, c.ext).astype(np.int64)
+    # itemsets equal to a prefix of one of the classes (or an ancestor on its
+    # DFS path) are scheduled with the prefix-support side channel (Phase 4
+    # line 2), not via a class.
+    closure = _prefix_closure([c.seq for c in classes])
+    is_prefix = np.array(
+        [frozenset(np.nonzero(m)[0].tolist()) in closure for m in universe_masks]
+    )
+    disjoint = bool((counts <= 1).all())
+    covered = bool(((counts == 1) | is_prefix).all())
+    return disjoint, covered
+
+
+def _prefix_closure(seqs):
+    """All ancestors along each class' DFS path, as frozensets of items."""
+    out = set()
+    for seq in seqs:
+        for k in range(1, len(seq) + 1):
+            out.add(frozenset(seq[:k]))
+    return out
+
+
+def classes_to_packed(classes: Sequence[PBEC]) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack class masks into packed uint32 arrays [C, IW] for device use."""
+    prefixes = np.stack([c.prefix for c in classes])
+    exts = np.stack([c.ext for c in classes])
+    return (
+        np.asarray(bm.pack_bool(jnp.asarray(prefixes))),
+        np.asarray(bm.pack_bool(jnp.asarray(exts))),
+    )

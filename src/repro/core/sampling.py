@@ -1,0 +1,178 @@
+"""Sampling theory + samplers — thesis Ch. 6.
+
+Sample-size formulas implemented exactly:
+  * Thm 6.1 (Toivonen/Chernoff):   |D̃| ≥ 1/(2ε²)·ln(2/δ)
+  * Thm 6.2 (coverage, i.i.d.):    |F̃s| ≥ 4/(ε²ρ)·ln(2/δ)
+  * Thm 6.3 (reservoir, hypergeom.): |F̃s| ≥ −log(δ/2)/D(ρ+ε‖ρ)
+
+Samplers:
+  * :func:`modified_coverage_sample` — Alg. 8, device-vectorized (the method's
+    fast non-uniform heuristic; no i.i.d. guarantee, as the thesis states).
+  * :func:`coverage_sample_uniform` — Alg. 7, host-side (uniform; used to
+    validate the heuristic in tests/benchmarks).
+  * the reservoir sampler lives *inside* the Eclat loop (repro.core.eclat);
+    :func:`reservoir_sample_np` is the host oracle for uniformity tests.
+  * :func:`merge_reservoirs` — Phase-1-Reservoir lines 10–14: hypergeometric
+    re-weighting of P per-processor reservoirs into one global uniform sample.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmap as bm
+
+
+# ---------------------------------------------------------------------------
+# Sample sizes
+# ---------------------------------------------------------------------------
+
+
+def db_sample_size(eps: float, delta: float) -> int:
+    """Thm 6.1 — database sample size for support error ≤ ε w.p. ≥ 1−δ."""
+    return int(math.ceil(math.log(2.0 / delta) / (2.0 * eps * eps)))
+
+
+def coverage_sample_size(eps: float, delta: float, rho: float) -> int:
+    """Thm 6.2 — i.i.d. FI-sample size for relative-size error ≤ ε·ρ."""
+    return int(math.ceil(4.0 / (eps * eps * rho) * math.log(2.0 / delta)))
+
+
+def kl_bernoulli(p: float, q: float) -> float:
+    """Kullback–Leibler divergence D(p‖q) of Bernoulli distributions."""
+    p = min(max(p, 1e-12), 1 - 1e-12)
+    q = min(max(q, 1e-12), 1 - 1e-12)
+    return p * math.log(p / q) + (1 - p) * math.log((1 - p) / (1 - q))
+
+
+def reservoir_sample_size(eps: float, delta: float, rho: float) -> int:
+    """Thm 6.3 — hypergeometric (reservoir) FI-sample size."""
+    return int(math.ceil(-math.log(delta / 2.0) / kl_bernoulli(rho + eps, rho)))
+
+
+# ---------------------------------------------------------------------------
+# Modified coverage algorithm (Alg. 8) — device, vectorized over N samples.
+# ---------------------------------------------------------------------------
+
+
+def modified_coverage_sample(
+    key: jax.Array,
+    mfi_items: jnp.ndarray,
+    mfi_valid: jnp.ndarray,
+    n_samples: int,
+    n_items: int,
+) -> jnp.ndarray:
+    """Draw N itemsets: pick m ∝ |P(m)| = 2^|m|, then a uniform subset of m.
+
+    Because the dedup loop of Alg. 7 is dropped, draws are independent but not
+    uniform over F̃ (samples in many P(m_i) are over-represented) — the thesis
+    calls this estimate a *heuristic* and so do we.
+
+    Returns packed masks ``uint32[N, IW]``.
+    """
+    sizes = bm.popcount_u32(mfi_items).sum(axis=-1).astype(jnp.float32)
+    logits = sizes * jnp.log(2.0)
+    logits = jnp.where(mfi_valid, logits, -jnp.inf)
+    k_pick, k_bits = jax.random.split(key)
+    picks = jax.random.categorical(k_pick, logits, shape=(n_samples,))
+    chosen = jnp.take(mfi_items, picks, axis=0)  # [N, IW]
+    rand_words = jax.random.bits(
+        k_bits, (n_samples, mfi_items.shape[-1]), dtype=jnp.uint32
+    )
+    return chosen & rand_words  # uniform subset of each chosen MFI
+
+
+# ---------------------------------------------------------------------------
+# Full coverage algorithm (Alg. 7) — host, uniform over F̃ = ∪P(m).
+# ---------------------------------------------------------------------------
+
+
+def coverage_sample_uniform(
+    rng: np.random.Generator,
+    mfi_masks: np.ndarray,  # bool [M, I]
+    n_samples: int,
+) -> np.ndarray:
+    """Uniform i.i.d. sample of ∪ P(m_i) via the coverage rejection rule.
+
+    A draw (W, i) is kept iff i is the *smallest* index with W ⊆ m_i — this
+    samples the set S' of §6.2.1 whose elements biject with F̃.
+    """
+    M, I = mfi_masks.shape
+    sizes = mfi_masks.sum(axis=1)
+    w = np.exp2(sizes - sizes.max())
+    w = w / w.sum()
+    out = np.zeros((n_samples, I), dtype=bool)
+    k = 0
+    while k < n_samples:
+        i = rng.choice(M, p=w)
+        subset = mfi_masks[i] & (rng.random(I) < 0.5)
+        # line 6: reject if contained in an earlier MFI
+        earlier = mfi_masks[:i]
+        if earlier.size and (~(subset & ~earlier).any(axis=1)).any():
+            continue
+        out[k] = subset
+        k += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Reservoir (host oracle) + hypergeometric merge of P reservoirs.
+# ---------------------------------------------------------------------------
+
+
+def reservoir_sample_np(
+    rng: np.random.Generator, stream: np.ndarray, n: int
+) -> np.ndarray:
+    """Algorithm R over a host stream — oracle for the in-loop sampler."""
+    R = stream[:n].copy()
+    for t in range(n, len(stream)):
+        j = rng.integers(0, t + 1)
+        if j < n:
+            R[j] = stream[t]
+    return R
+
+
+def merge_reservoirs(
+    rng: np.random.Generator,
+    counts: np.ndarray,  # f_i: total FIs seen by each processor [P]
+    n_take: int,
+) -> np.ndarray:
+    """Phase-1-Reservoir lines 10–12: X ~ multivariate hypergeometric(f_i).
+
+    Processor i contributes X_i of its reservoir elements; since each local
+    reservoir is uniform over its local stream, the merged sample is uniform
+    over the union.  Returns X ``int[P]`` with ΣX = min(n_take, Σf).
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    remaining = counts.copy()
+    total = int(counts.sum())
+    n_take = min(n_take, total)
+    X = np.zeros(len(counts), dtype=np.int64)
+    # sequential marginals of the multivariate hypergeometric
+    left = n_take
+    pool = total
+    for i in range(len(counts)):
+        if left == 0 or pool == 0:
+            break
+        x = rng.hypergeometric(remaining[i], pool - remaining[i], left)
+        X[i] = x
+        left -= x
+        pool -= remaining[i]
+    return X
+
+
+# ---------------------------------------------------------------------------
+# Phase-1 database sampling helper
+# ---------------------------------------------------------------------------
+
+
+def sample_db(
+    db: bm.BitmapDB, key: jax.Array, n_sample: int
+) -> bm.BitmapDB:
+    """i.i.d. with-replacement transaction sample as a new BitmapDB."""
+    rows = bm.sample_transactions(db.tx_bits, key, n_sample, db.n_tx)
+    return bm.rebuild_vertical(rows, db.n_items, n_sample)

@@ -1,0 +1,113 @@
+"""Schedulers: LPT (Alg. 16) and the replication-aware greedy QKP (Alg. 23).
+
+Host-side control plane.  ``lpt_schedule`` is Graham's Longest-Processing-Time
+best-fit (4/3-approximation, Lemma 8.2) — used both for PBEC→processor
+assignment (Phase 2) and, beyond the paper, for MoE expert→EP-rank placement
+(see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def lpt_schedule(sizes: Sequence[float], n_processors: int) -> np.ndarray:
+    """Assign each task to the least-loaded processor, largest tasks first.
+
+    Returns ``assignment int[n_tasks]``; ties broken by processor index for
+    determinism (important for multi-host agreement: every host computes the
+    same schedule from the same broadcast sample).
+    """
+    sizes = np.asarray(sizes, dtype=np.float64)
+    order = np.argsort(-sizes, kind="stable")
+    loads = np.zeros(n_processors, dtype=np.float64)
+    assignment = np.zeros(len(sizes), dtype=np.int64)
+    for t in order:
+        p = int(np.argmin(loads))  # first minimum ⇒ deterministic
+        assignment[t] = p
+        loads[p] += sizes[t]
+    return assignment
+
+
+def loads_of(sizes: Sequence[float], assignment: np.ndarray, P: int) -> np.ndarray:
+    loads = np.zeros(P, dtype=np.float64)
+    np.add.at(loads, assignment, np.asarray(sizes, dtype=np.float64))
+    return loads
+
+
+def lpt_makespan_bound_ok(sizes: Sequence[float], assignment: np.ndarray, P: int) -> bool:
+    """Soundly checkable Graham guarantee.
+
+    The classic 4/3·OPT bound needs the true OPT; against the computable
+    lower bound max(mean, max) the sound list-scheduling guarantee is
+    ``makespan ≤ Σ/P + (1 − 1/P)·max`` — we check that (it implies ≤ 2·OPT,
+    and LPT is in fact 4/3-optimal per Lemma 8.2)."""
+    sizes = np.asarray(sizes, dtype=np.float64)
+    if len(sizes) == 0:
+        return True
+    loads = loads_of(sizes, assignment, P)
+    bound = sizes.sum() / P + (1.0 - 1.0 / P) * sizes.max()
+    return loads.max() <= bound + 1e-9
+
+
+def db_repl_min(
+    sizes: np.ndarray,        # est. class sizes w_i
+    profit: np.ndarray,       # S_ij = |T(U_i ∪ U_j)| shared-transaction counts
+    n_processors: int,
+) -> np.ndarray:
+    """Alg. 23 (DB-Repl-Min): replication-aware assignment via greedy QKP.
+
+    For each processor in turn, greedily add the unassigned class with the
+    largest marginal shared-transaction profit w.r.t. the classes already in
+    this processor's knapsack, subject to the capacity c = Σw/P.  Greedy is our
+    QKP oracle (the thesis leaves the QKP solver open; exact QKP is NP-hard).
+
+    Returns ``assignment int[n_tasks]``.
+    """
+    n = len(sizes)
+    sizes = np.asarray(sizes, dtype=np.float64)
+    cap = sizes.sum() / n_processors
+    assignment = np.full(n, -1, dtype=np.int64)
+    for p in range(n_processors - 1):
+        free = np.nonzero(assignment < 0)[0]
+        if free.size == 0:
+            break
+        load = 0.0
+        # seed with the largest free class (ensures progress even if > cap)
+        seed = free[np.argmax(sizes[free])]
+        chosen = [seed]
+        assignment[seed] = p
+        load += sizes[seed]
+        while True:
+            free = np.nonzero(assignment < 0)[0]
+            if free.size == 0:
+                break
+            gains = profit[np.ix_(free, chosen)].sum(axis=1)
+            ordergain = np.argsort(-gains, kind="stable")
+            placed = False
+            for gi in ordergain:
+                c = free[gi]
+                if load + sizes[c] <= cap * 1.05:  # small slack like LPT ties
+                    assignment[c] = p
+                    chosen.append(c)
+                    load += sizes[c]
+                    placed = True
+                    break
+            if not placed:
+                break
+    # last processor takes the remainder
+    assignment[assignment < 0] = n_processors - 1
+    return assignment
+
+
+def pairwise_shared_transactions(tidlists: np.ndarray) -> np.ndarray:
+    """S_ij = popcount(tid_i & tid_j) for packed uint32 tidlists [C, W]."""
+    from repro.core import bitmap as bm
+    import jax.numpy as jnp
+
+    t = jnp.asarray(tidlists)
+    inter = bm.popcount_u32(t[:, None, :] & t[None, :, :]).sum(axis=-1)
+    out = np.array(inter)  # writable copy
+    np.fill_diagonal(out, 0)
+    return out

@@ -1,0 +1,125 @@
+"""IBM-Quest-style synthetic transaction database generator.
+
+The thesis evaluates on databases produced by the IBM generator, named
+``T<tx/1000>I<items/1000>P<patterns>PL<pattern_len>TL<tx_len>`` (§11.2), e.g.
+``T500I0.1P50PL10TL40`` = 500k transactions, 100 items, 50 patterns of average
+length 10, average transaction length 40.
+
+This is a faithful, deterministic numpy re-implementation of the generator's
+core mechanism (Agrawal & Srikant '94): draw a pool of "potentially frequent"
+patterns with Poisson lengths and exponentially-decaying weights, then build
+each transaction as a union of weighted-sampled patterns (with per-item
+corruption) until the target transaction length is reached.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class IBMParams:
+    n_tx: int = 2000
+    n_items: int = 100
+    n_patterns: int = 50
+    avg_pattern_len: float = 10.0
+    avg_tx_len: float = 40.0
+    corruption: float = 0.5
+    seed: int = 0
+
+    @property
+    def name(self) -> str:
+        def fmt(x: float) -> str:
+            s = f"{x:g}"
+            return s
+
+        return (
+            f"T{fmt(self.n_tx / 1000)}I{fmt(self.n_items / 1000)}"
+            f"P{self.n_patterns}PL{fmt(self.avg_pattern_len)}TL{fmt(self.avg_tx_len)}"
+        )
+
+
+_NAME_RE = re.compile(
+    r"T(?P<t>[\d.]+)I(?P<i>[\d.]+)P(?P<p>\d+)PL(?P<pl>[\d.]+)TL(?P<tl>[\d.]+)"
+)
+
+
+def params_from_name(name: str, seed: int = 0) -> IBMParams:
+    """Parse a thesis-style database name into generator params."""
+    m = _NAME_RE.fullmatch(name)
+    if not m:
+        raise ValueError(f"not a T..I..P..PL..TL.. database name: {name!r}")
+    return IBMParams(
+        n_tx=int(float(m["t"]) * 1000),
+        n_items=max(int(float(m["i"]) * 1000), 1),
+        n_patterns=int(m["p"]),
+        avg_pattern_len=float(m["pl"]),
+        avg_tx_len=float(m["tl"]),
+        seed=seed,
+    )
+
+
+def generate_dense(params: IBMParams) -> np.ndarray:
+    """Generate a dense bool transaction matrix ``[n_tx, n_items]``."""
+    rng = np.random.default_rng(params.seed)
+    I, P = params.n_items, params.n_patterns
+
+    # -- pattern pool ---------------------------------------------------------
+    # Pattern lengths ~ Poisson(avg_pattern_len), at least 1, at most n_items.
+    plens = np.clip(rng.poisson(params.avg_pattern_len, P), 1, I)
+    # Item popularity is skewed (Zipf-ish) as in the original generator.
+    item_w = 1.0 / np.arange(1, I + 1)
+    item_w /= item_w.sum()
+    patterns = []
+    prev: np.ndarray | None = None
+    for k in range(P):
+        L = int(plens[k])
+        # Successive patterns share items (generator's "correlation"): take half
+        # from the previous pattern when possible.
+        take_prev = 0
+        base: list[int] = []
+        if prev is not None and len(prev) > 1:
+            take_prev = min(L // 2, len(prev))
+            base = list(rng.choice(prev, size=take_prev, replace=False))
+        rest = rng.choice(I, size=I, replace=False, p=None)
+        for it in rest:
+            if len(base) >= L:
+                break
+            if it not in base:
+                base.append(int(it))
+        patterns.append(np.array(sorted(base[:L]), dtype=np.int64))
+        prev = patterns[-1]
+
+    # Pattern weights: exponential decay, normalized (original: exp. distributed).
+    pw = rng.exponential(1.0, P)
+    pw /= pw.sum()
+    # Per-pattern corruption level.
+    corr = np.clip(rng.normal(params.corruption, 0.1, P), 0.0, 0.95)
+
+    # -- transactions ---------------------------------------------------------
+    tlens = np.clip(rng.poisson(params.avg_tx_len, params.n_tx), 1, I)
+    dense = np.zeros((params.n_tx, I), dtype=bool)
+    pat_choices = rng.choice(P, size=(params.n_tx, 8), p=pw)
+    for t in range(params.n_tx):
+        target = int(tlens[t])
+        got = 0
+        for k in pat_choices[t]:
+            if got >= target:
+                break
+            pat = patterns[k]
+            keep = rng.random(len(pat)) >= corr[k]
+            kept = pat[keep]
+            dense[t, kept] = True
+            got = int(dense[t].sum())
+        if got == 0:  # guarantee non-empty transactions
+            dense[t, rng.integers(0, I)] = True
+    return dense
+
+
+def generate(params: IBMParams):
+    """Generate and return a ``BitmapDB`` (imported lazily to avoid jax at import)."""
+    from repro.core.bitmap import BitmapDB
+
+    return BitmapDB.from_dense(generate_dense(params))

@@ -1,0 +1,118 @@
+"""Post-SPMD HLO inspection: collective inventory + wire-byte accounting.
+
+``compiled.cost_analysis()`` has no collective term, so we parse the scheduled
+HLO text.  For each collective we record the *result* shape bytes and the
+replica-group size g, then convert to **per-device wire bytes** (ring
+algorithms, the v5e ICI model):
+
+  all-gather:          (g-1)/g · result_bytes
+  all-reduce:        2·(g-1)/g · result_bytes
+  reduce-scatter:      (g-1)/g · operand_bytes  = (g-1) · result_bytes
+  all-to-all:          (g-1)/g · result_bytes
+  collective-permute:            result_bytes
+
+The roofline collective term is Σ wire_bytes_per_device / link_bw — already a
+per-chip time, equivalent to the brief's "collective_bytes / (chips·link_bw)"
+with collective_bytes summed over chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\([^)]*\)|(?P<dtype>\w+)\[(?P<dims>[\d,]*)\][^ ]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_TUPLE_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+@dataclasses.dataclass
+class Collective:
+    op: str
+    bytes_result: int
+    group_size: int
+    line: str
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _line_result_bytes(line: str) -> Tuple[int, Optional[str]]:
+    """Total result bytes (handles tuple results) and op name if collective."""
+    m = _COLL_RE.search(line)
+    if not m:
+        return 0, None
+    op = m.group("op")
+    if m.group("dtype"):
+        return _shape_bytes(m.group("dtype"), m.group("dims")), op
+    # tuple result: sum the component shapes inside (...) right after '='
+    lhs = line.split("=", 1)[1]
+    paren = lhs[: lhs.find(op)]
+    total = sum(_shape_bytes(t, d) for t, d in _TUPLE_SHAPE_RE.findall(paren))
+    return total, op
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return world
+
+
+def parse_collectives(hlo_text: str, world: int) -> List[Collective]:
+    out: List[Collective] = []
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # paired with the -start that carries the shape
+        b, op = _line_result_bytes(line)
+        if op is None or b == 0:
+            continue
+        out.append(Collective(op, b, _group_size(line, world), line.strip()[:160]))
+    return out
+
+
+def wire_bytes_per_device(c: Collective) -> float:
+    g = max(c.group_size, 1)
+    frac = (g - 1) / g
+    if c.op == "all-reduce":
+        return 2.0 * frac * c.bytes_result
+    if c.op == "all-gather":
+        return frac * c.bytes_result
+    if c.op == "reduce-scatter":
+        return (g - 1) * c.bytes_result
+    if c.op == "all-to-all":
+        return frac * c.bytes_result
+    if c.op == "collective-permute":
+        return float(c.bytes_result)
+    return 0.0
+
+
+def collective_summary(hlo_text: str, world: int) -> Dict[str, float]:
+    colls = parse_collectives(hlo_text, world)
+    by_op: Dict[str, float] = {}
+    total = 0.0
+    for c in colls:
+        w = wire_bytes_per_device(c)
+        by_op[c.op] = by_op.get(c.op, 0.0) + w
+        total += w
+    return {"total_wire_bytes_per_device": total, "count": len(colls), **by_op}

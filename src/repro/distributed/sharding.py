@@ -1,0 +1,149 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+Every parameter carries logical axis names from its ParamSpec; rules map them
+to mesh axes.  A mapping is *dropped* (replicated) when the dim is not
+divisible by the mesh-axis product or the mesh axis was already consumed by an
+earlier dim of the same param — so one rule table serves every architecture
+(24-head llama can't split 16-way TP on heads: heads drop, ffn still shards).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+
+Rules = Dict[str, Optional[Tuple[str, ...]]]
+
+
+def default_rules(multi_pod: bool, fsdp: bool = True) -> Rules:
+    """Baseline rule table.  TP over "model"; FSDP of the d_model ("embed")
+    param dim over the data axes (ZeRO-3-style, all-gathered per scan step)."""
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ffn": ("model",),
+        "experts": ("model",),
+        "embed": data_axes if fsdp else None,
+        "layers": None,
+        "head_dim": None,
+        "q_lora": None,
+        "kv_lora": None,
+    }
+
+
+def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def spec_for(
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Rules,
+) -> PS:
+    """PartitionSpec for one param; drops non-divisible / conflicting axes."""
+    used: set = set()
+    entries = []
+    for dim, name in zip(shape, logical):
+        target = rules.get(name) if name else None
+        if target:
+            target = tuple(a for a in target if a not in used)
+        if not target or dim % _axis_size(mesh, target) != 0:
+            entries.append(None)
+            continue
+        used.update(target)
+        entries.append(target if len(target) > 1 else target[0])
+    # trim trailing Nones (canonical form)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PS(*entries)
+
+
+def tree_shardings(abstract_tree, axes_tree, mesh: Mesh, rules: Rules):
+    """NamedSharding tree matching an abstract param tree."""
+
+    def one(a, ax):
+        return NamedSharding(mesh, spec_for(a.shape, ax, mesh, rules))
+
+    return jax.tree.map(one, abstract_tree, axes_tree)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_spec(mesh: Mesh, batch: int, ndim: int) -> PS:
+    """Spec for a [B, ...] batch array: B over the data axes when divisible."""
+    ax = batch_axes(mesh)
+    if batch % _axis_size(mesh, ax) == 0:
+        lead = ax if len(ax) > 1 else ax[0]
+        return PS(lead, *([None] * (ndim - 1)))
+    # fall back: try "data" alone
+    if batch % mesh.shape["data"] == 0:
+        return PS("data", *([None] * (ndim - 1)))
+    return PS(*([None] * ndim))
+
+
+def _divides(n: int, mesh: Mesh, axis: str) -> bool:
+    return n % mesh.shape[axis] == 0
+
+
+def cache_spec_for_leaf(shape: Tuple[int, ...], mesh: Mesh) -> PS:
+    """Heuristic decode-cache sharding.
+
+    Leaves look like [L, B, S, KV, hd] (attention K/V), [L, B, S, r] (MLA
+    latent), [L, B, H, P, N] (SSM state), [L, B, w, conv] (conv state), or the
+    same with an extra hybrid sub-layer dim.  Policy: shard the batch dim over
+    "data" when divisible, else the longest remaining dim; shard a heads-like
+    middle dim over "model" when divisible, else the sequence dim.
+    """
+    entries: list = [None] * len(shape)
+    if len(shape) < 2:
+        return PS()
+    # batch dim = first dim of size != n_layers... by construction dim 1
+    b_dim = 1 if len(shape) >= 2 else 0
+    used_data = used_model = False
+    has_pod = "pod" in mesh.shape
+    d_axes = ("pod", "data") if has_pod else ("data",)
+    d_size = 1
+    for a_ in d_axes:
+        d_size *= mesh.shape[a_]
+    if shape[b_dim] % d_size == 0 and shape[b_dim] > 1:
+        entries[b_dim] = d_axes if has_pod else "data"
+        used_data = True
+    elif _divides(shape[b_dim], mesh, "data") and shape[b_dim] > 1:
+        entries[b_dim] = "data"
+        used_data = True
+    # model axis: prefer a later dim divisible by model size, largest first
+    cand = sorted(
+        range(b_dim + 1, len(shape)), key=lambda i: -shape[i]
+    )
+    for i in cand:
+        if entries[i] is None and shape[i] > 1 and _divides(shape[i], mesh, "model"):
+            entries[i] = "model"
+            used_model = True
+            break
+    if not used_data:
+        for i in cand:
+            if entries[i] is None and shape[i] > 1 and _divides(shape[i], mesh, "data"):
+                entries[i] = "data"
+                break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PS(*entries)
+
+
+def cache_shardings(cache_abstract, mesh: Mesh):
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, cache_spec_for_leaf(a.shape, mesh)),
+        cache_abstract,
+    )
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, PS())

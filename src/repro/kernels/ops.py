@@ -1,0 +1,59 @@
+"""Public jit'd entry points for the mining kernels with backend dispatch.
+
+On TPU the Pallas kernels run compiled; on CPU (this container) the pure-jnp
+reference path is used for speed, with ``interpret=True`` Pallas execution
+available everywhere for validation (exercised by the kernel tests).
+
+``extension_supports`` is the function the Eclat/MFI miners take as their
+``support_fn`` plug-in.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitmap_support as _bs
+from repro.kernels import pair_support as _ps
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def extension_supports(
+    item_bits: jnp.ndarray,
+    prefix_tid: jnp.ndarray,
+    *,
+    force: str | None = None,
+) -> jnp.ndarray:
+    """Supports of prefix ∪ {i} for all items.  force ∈ {None,'pallas','ref',
+    'interpret'} selects the implementation."""
+    mode = force or ("pallas" if _on_tpu() else "ref")
+    if mode == "pallas":
+        return _bs.extension_supports_pallas(item_bits, prefix_tid)
+    if mode == "interpret":
+        return _bs.extension_supports_pallas(item_bits, prefix_tid, interpret=True)
+    return _ref.extension_supports_ref(item_bits, prefix_tid)
+
+
+def pair_supports(
+    item_bits: jnp.ndarray,
+    valid_tid: jnp.ndarray,
+    *,
+    use_mxu: bool = True,
+    force: str | None = None,
+) -> jnp.ndarray:
+    """All-pairs supports S[i,j].  ``use_mxu`` picks the unpack+dot kernel."""
+    mode = force or ("pallas" if _on_tpu() else "ref")
+    if mode == "pallas":
+        f = _ps.pair_supports_mxu_pallas if use_mxu else _ps.pair_supports_pallas
+        return f(item_bits, valid_tid)
+    if mode == "interpret":
+        f = _ps.pair_supports_mxu_pallas if use_mxu else _ps.pair_supports_pallas
+        return f(item_bits, valid_tid, interpret=True)
+    if use_mxu:
+        return _ref.pair_supports_mxu_ref(item_bits, valid_tid)
+    return _ref.pair_supports_ref(item_bits, valid_tid)

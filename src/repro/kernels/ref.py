@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (the contract every kernel meets).
+
+These are thin named wrappers over ``repro.core.bitmap`` reference forms so the
+kernel tests have a single import point, plus the unpacked-MXU reference.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+
+
+def extension_supports_ref(item_bits: jnp.ndarray, prefix_tid: jnp.ndarray) -> jnp.ndarray:
+    """int32[I] = popcount(item_bits[i] & prefix_tid) summed over words."""
+    return bm.extension_supports(item_bits, prefix_tid)
+
+
+def pair_supports_ref(item_bits: jnp.ndarray, valid_tid: jnp.ndarray) -> jnp.ndarray:
+    """int32[I, I] all-pairs supports via VPU-style popcount(AND)."""
+    return bm.pair_supports(item_bits, valid_tid)
+
+
+def unpack_bits_f32(words: jnp.ndarray) -> jnp.ndarray:
+    """uint32[..., W] -> float32[..., W*32] of 0/1 — the MXU-form operand."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(words.shape[:-1] + (words.shape[-1] * 32,)).astype(jnp.float32)
+
+
+def pair_supports_mxu_ref(item_bits: jnp.ndarray, valid_tid: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs supports as a matmul over unpacked bits (exact in f32 for
+    supports < 2^24).  Oracle of the fused unpack+dot Pallas kernel."""
+    masked = unpack_bits_f32(item_bits & valid_tid[None, :])
+    return jnp.dot(masked, masked.T).astype(jnp.int32)

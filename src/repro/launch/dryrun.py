@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this lowers the real train/prefill/serve step with production
+shardings on the 16×16 (single-pod, 256 chips) or 2×16×16 (multi-pod, 512
+chips) mesh, compiles it, and records
+
+  * ``memory_analysis()``  — per-device argument/temp/output bytes (the proof
+    the cell fits 16 GB HBM),
+  * ``cost_analysis()``    — per-device HLO FLOPs / bytes accessed,
+  * the collective inventory parsed from the scheduled HLO (wire bytes),
+
+into ``results/dryrun/<arch>__<shape>__<mesh>.json`` for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-20b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --sweep [--mesh both] [--jobs 1]
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, overrides=None) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import SHAPES, shapes_for
+    from repro.configs.registry import get_config
+    from repro.distributed import hlo as hlo_mod
+    from repro.distributed import sharding as shd
+    from repro.launch import input_specs as ispec
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import model as M
+    from repro.models import steps
+    from repro.optim import adamw
+
+    t0 = time.time()
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    if shape_name not in shapes_for(cfg):
+        return {"skipped": f"{arch} is full-attention; long_500k not lowered"}
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    world = int(len(jax.devices()) if multi else 256)
+    cfg_cell = ispec.shape_adjusted_config(cfg, shape)
+
+    n_par = M.n_params(cfg_cell)
+    big = n_par > 50e9
+    small = n_par < 1e9  # pure-DP: TP gains nothing, batch spans both axes
+    if not small and cfg_cell.moe and cfg_cell.moe.n_experts:
+        # bound the dispatch buffers: ~8k tokens per chunk per data shard
+        tc = 8192 * (world // 16)
+        cfg_cell = dataclasses.replace(
+            cfg_cell, moe=dataclasses.replace(cfg_cell.moe, token_chunk=tc)
+        )
+    rules = shd.default_rules(multi_pod=multi)
+    zero1 = bool(os.environ.get("REPRO_ZERO1")) and not small and not big
+    if zero1:
+        # ZeRO-1: params TP-only (replicated across data) so the per-microbatch
+        # FSDP all-gather disappears; optimizer state stays data-sharded.
+        rules = shd.default_rules(multi_pod=multi, fsdp=False)
+    if small:
+        # pure-DP: replicate params; batch spans both mesh axes
+        rules = {k: None for k in rules}
+    abs_params = M.abstract(cfg_cell)
+    ax = M.axes(cfg_cell)
+    p_shard = shd.tree_shardings(abs_params, ax, mesh, rules)
+
+    opt_cfg = adamw.AdamWConfig(state_dtype="bfloat16" if big else "float32")
+    attn_chunk = None if shape.seq_len < 4096 else (
+        1024 if shape.seq_len == 4096 else 2048
+    )
+
+    from jax.sharding import PartitionSpec as PS
+
+    if small:
+        b_axes = ("pod", "data", "model") if multi else ("data", "model")
+    else:
+        b_axes = ("pod", "data") if multi else ("data",)
+    act_spec = PS(b_axes, None, None)
+
+    def bspec(a):
+        nshards = 1
+        for ax_ in b_axes:
+            nshards *= mesh.shape[ax_]
+        if a.shape[0] % nshards == 0:
+            return jax.NamedSharding(
+                mesh, PS(b_axes, *([None] * (len(a.shape) - 1)))
+            )
+        return jax.NamedSharding(
+            mesh, shd.data_spec(mesh, a.shape[0], len(a.shape))
+        )
+
+    accum = 1
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            # MoE dispatch buffers and d6144 dense activations scale 1/accum;
+            # policy tuned per family from the baseline sweep (§Perf).
+            # microbatch must stay divisible by the data shards: B=256 over
+            # 16 data shards caps accum at 16 (accum 32 ⇒ mb 8 unshardable —
+            # measured: batch silently replicated, +20 GB on Jamba train).
+            if small:
+                accum = 1
+            elif big or (cfg_cell.moe and cfg_cell.moe.n_experts):
+                accum = 16
+            elif n_par > 10e9:
+                accum = 16
+            else:
+                accum = 8
+            step_fn = steps.make_train_step(
+                cfg_cell,
+                opt_cfg,
+                accum=accum,
+                attn_chunk=attn_chunk,
+                batch_spec=b_axes,
+                act_spec=act_spec,
+                accum_dtype=jnp.bfloat16 if big else jnp.float32,
+            )
+            abs_opt = jax.eval_shape(lambda p: adamw.init(p, opt_cfg), abs_params)
+            if zero1:
+                opt_rules = shd.default_rules(multi_pod=multi, fsdp=True)
+                ov_shard = shd.tree_shardings(abs_params, ax, mesh, opt_rules)
+            else:
+                ov_shard = p_shard
+            o_shard = adamw.AdamWState(
+                step=shd.replicated(mesh),
+                m=jax.tree.map(lambda a, s: s, abs_opt.m, ov_shard),
+                v=jax.tree.map(lambda a, s: s, abs_opt.v, ov_shard),
+            )
+            batch = ispec.batch_specs(cfg_cell, shape)
+            b_shard = jax.tree.map(bspec, batch)
+            jf = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+            )
+            lowered = jf.lower(abs_params, abs_opt, batch)
+        elif shape.kind == "prefill":
+            step_fn = steps.make_prefill_step(
+                cfg_cell, attn_chunk=attn_chunk, act_spec=act_spec
+            )
+            batch = ispec.batch_specs(cfg_cell, shape)
+            b_shard = jax.tree.map(bspec, batch)
+            jf = jax.jit(step_fn, in_shardings=(p_shard, b_shard))
+            lowered = jf.lower(abs_params, batch)
+        else:  # decode
+            step_fn = steps.make_serve_step(cfg_cell)
+            cache, tokens, pos = ispec.decode_specs(cfg, shape)
+            c_shard = shd.cache_shardings(cache, mesh)
+            t_shard = jax.NamedSharding(
+                mesh, shd.data_spec(mesh, tokens.shape[0], 2)
+            )
+            jf = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, c_shard, t_shard, shd.replicated(mesh)),
+                out_shardings=(None, c_shard),
+            )
+            lowered = jf.lower(abs_params, cache, tokens, pos)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    colls = hlo_mod.collective_summary(txt, world)
+
+    per_dev_bytes = (
+        ma.argument_size_in_bytes + ma.temp_size_in_bytes + ma.output_size_in_bytes
+        - ma.alias_size_in_bytes
+    )
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "world": world,
+        "n_params": n_par,
+        "kind": shape.kind,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "per_device_total_bytes": per_dev_bytes,
+            "fits_16GB": bool(per_dev_bytes < 16e9),
+        },
+        "cost": {
+            "flops_per_device": float(ca.get("flops", -1.0)),
+            "bytes_accessed_per_device": float(ca.get("bytes accessed", -1.0)),
+        },
+        "collectives": colls,
+        "timing": {"lower_s": t_lower, "compile_s": t_compile},
+        "overrides": overrides or {},
+        # Loop multipliers for cost reconstruction: XLA cost_analysis counts
+        # while-loop bodies ONCE (verified), so the analytic roofline model in
+        # benchmarks/roofline.py carries the trip counts explicitly.
+        "loops": {
+            "accum": accum if shape.kind == "train" else 1,
+            "layer_scan_trips": (
+                cfg_cell.n_layers // max(cfg_cell.attn_every, 1)
+                if cfg_cell.family == "hybrid"
+                else cfg_cell.n_layers
+            ),
+            "attn_chunk": attn_chunk,
+        },
+    }
+
+
+def cell_filename(arch, shape, mesh_kind, tag=""):
+    t = f"__{tag}" if tag else ""
+    return RESULTS / f"{arch}__{shape}__{mesh_kind}{t}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for experiment variants")
+    ap.add_argument("--overrides", default="", help="JSON dict of ModelConfig overrides")
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+
+    if args.sweep:
+        from repro.configs.base import SHAPES, shapes_for
+        from repro.configs.registry import all_archs, get_config
+
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        cells = []
+        for arch in all_archs():
+            for shape in shapes_for(get_config(arch)):
+                for mk in meshes:
+                    cells.append((arch, shape, mk))
+        print(f"sweeping {len(cells)} cells", flush=True)
+        for arch, shape, mk in cells:
+            out = cell_filename(arch, shape, mk, args.tag)
+            if out.exists() and not args.force:
+                print(f"SKIP {out.name} (exists)", flush=True)
+                continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shape, "--mesh", mk,
+            ]
+            if args.tag:
+                cmd += ["--tag", args.tag]
+            if args.overrides:
+                cmd += ["--overrides", args.overrides]
+            t0 = time.time()
+            try:
+                r = subprocess.run(cmd, timeout=args.timeout, capture_output=True, text=True)
+                ok = r.returncode == 0 and out.exists()
+                print(
+                    f"{'OK  ' if ok else 'FAIL'} {arch} {shape} {mk} "
+                    f"({time.time()-t0:.0f}s)",
+                    flush=True,
+                )
+                if not ok:
+                    (RESULTS / f"{arch}__{shape}__{mk}{'__'+args.tag if args.tag else ''}.err").write_text(
+                        (r.stdout or "")[-4000:] + "\n---\n" + (r.stderr or "")[-8000:]
+                    )
+            except subprocess.TimeoutExpired:
+                print(f"TIMEOUT {arch} {shape} {mk}", flush=True)
+        return
+
+    overrides = json.loads(args.overrides) if args.overrides else None
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh, overrides)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+    out = cell_filename(args.arch, args.shape, args.mesh, args.tag)
+    out.write_text(json.dumps(rec, indent=2))
+    if "skipped" in rec:
+        print(f"SKIPPED: {rec['skipped']}")
+        return
+    print(json.dumps({k: rec[k] for k in ("arch", "shape", "mesh", "memory", "cost", "timing")}, indent=2))
+    print("collectives:", json.dumps(rec["collectives"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+No device allocation; shardable; weak-type-correct.  Modality frontends are
+stubs per the assignment: ``vision_embeds`` / ``frames`` arrive as precomputed
+embeddings with the model's d_model width.
+
+Shape semantics (recorded per DESIGN.md):
+  * train/prefill: ``seq_len`` is the token positions budget.  VLM: 256 of the
+    positions are patch embeddings, the rest text.  Enc-dec: seq_len applies to
+    the *encoder frames* (audio length — the compute-dominant side) with a
+    448-token decoder, Whisper's native split.
+  * decode: one new token against a cache of ``seq_len``.  Enc-dec: cross
+    context of seq_len encoder states, 448-deep decoder self-cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+
+SDS = jax.ShapeDtypeStruct
+
+WHISPER_DEC_LEN = 448
+
+
+def shape_adjusted_config(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Per-cell config tweaks (enc-dec cross-context follows the cell)."""
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, enc_context=shape.seq_len)
+    return cfg
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """The forward-pass batch for train/prefill cells."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "vlm":
+        nv = cfg.vision_tokens
+        return {
+            "tokens": SDS((B, S - nv), jnp.int32),
+            "vision_embeds": SDS((B, nv, cfg.d_model), dt),
+        }
+    if cfg.family == "encdec":
+        return {
+            "tokens": SDS((B, WHISPER_DEC_LEN), jnp.int32),
+            "frames": SDS((B, S, cfg.d_model), dt),
+        }
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_specs(
+    cfg: ModelConfig, shape: ShapeConfig
+) -> Tuple[Any, Any, Any]:
+    """(cache, tokens, pos) abstract args for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    cfg = shape_adjusted_config(cfg, shape)
+    max_len = WHISPER_DEC_LEN if cfg.family == "encdec" else S
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, B, max_len, jnp.dtype(cfg.compute_dtype))
+    )
+    tokens = SDS((B, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return cache, tokens, pos

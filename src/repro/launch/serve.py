@@ -1,0 +1,68 @@
+"""Batched serving driver: prefill + incremental decode with a KV cache.
+
+  python -m repro.launch.serve --arch mamba2-1.3b --smoke --batch 4 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models import model as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    key = jax.random.PRNGKey(0)
+    params = M.init(cfg, key)
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_len = P + G
+
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab)
+    cache = M.init_cache(cfg, B, max_len, jnp.float32)
+    if cfg.family == "encdec":
+        frames = jax.random.normal(key, (B, cfg.enc_context, cfg.d_model), jnp.float32)
+        cache = M.encode(cfg, params, frames, cache)
+
+    step = jax.jit(lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+
+    # prefill by stepping (simple serving path; batched prefill kernel exists
+    # as make_prefill_step for the bulk case)
+    t0 = time.time()
+    logits = None
+    for t in range(P):
+        logits, cache = step(params, cache, prompts[:, t : t + 1], jnp.asarray(t, jnp.int32))
+    out = []
+    tok = jnp.argmax(logits[:, -1:, : cfg.vocab], axis=-1).astype(jnp.int32)
+    for t in range(P, P + G):
+        out.append(np.asarray(tok)[:, 0])
+        logits, cache = step(params, cache, tok, jnp.asarray(t, jnp.int32))
+        if args.temperature > 0:
+            key2 = jax.random.fold_in(key, t)
+            tok = jax.random.categorical(
+                key2, logits[:, -1, : cfg.vocab] / args.temperature
+            )[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1:, : cfg.vocab], axis=-1).astype(jnp.int32)
+    dt = time.time() - t0
+    gen = np.stack(out, axis=1)
+    print(f"arch={cfg.name} generated {gen.shape} tokens in {dt:.2f}s "
+          f"({B*(P+G)/dt:.1f} tok/s incl. prefill)")
+    print("first sequence:", gen[0][:16], "...")
+
+
+if __name__ == "__main__":
+    main()

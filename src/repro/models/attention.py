@@ -1,0 +1,256 @@
+"""GQA attention: training/prefill (chunked, flash-style) + cached decode."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_specs(d: int, n_heads: int, n_kv: int, hd: int) -> Dict[str, ParamSpec]:
+    return {
+        "wq": ParamSpec((d, n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, n_kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, n_kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((n_heads, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _group(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """[B,T,H,hd] -> [B,T,KV,G,hd] with H = KV*G."""
+    B, T, H, hd = q.shape
+    return q.reshape(B, T, n_kv, H // n_kv, hd)
+
+
+def sdpa_causal(
+    q: jnp.ndarray,        # [B, Tq, H, hd]
+    k: jnp.ndarray,        # [B, Tk, KV, hd]
+    v: jnp.ndarray,        # [B, Tk, KV, hd]
+    q_positions: jnp.ndarray,   # [Tq] absolute positions of queries
+    k_valid_len: Optional[jnp.ndarray] = None,  # scalar: #valid kv (decode)
+) -> jnp.ndarray:
+    """Dense causal GQA attention (reference / decode / small-T path)."""
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    qg = _group(q, KV)                                  # [B,Tq,KV,G,hd]
+    scale = hd ** -0.5
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg, k) * scale
+    kpos = jnp.arange(k.shape[1])
+    mask = kpos[None, :] <= q_positions[:, None]        # [Tq, Tk]
+    if k_valid_len is not None:
+        mask = mask & (kpos[None, :] < k_valid_len)
+    scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32), NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum("bkgts,bskh->btkgh", p, v)
+    return ctx.reshape(B, Tq, H, hd)
+
+
+def chunked_causal_attention(
+    q: jnp.ndarray,       # [B, T, H, hd_qk]
+    k: jnp.ndarray,       # [B, T, KV, hd_qk]
+    v: jnp.ndarray,       # [B, T, KV, hd_v]  (hd_v may differ — MLA)
+    chunk: int = 1024,
+) -> jnp.ndarray:
+    """Flash-style online-softmax attention, O(T·chunk) memory.
+
+    Queries are processed in blocks; for each query block a ``lax.scan`` walks
+    the ≤ causal KV blocks carrying (m, l, acc) running statistics.  Pure jnp:
+    on TPU, XLA maps the inner einsums onto the MXU; this is the memory-term
+    workhorse for the 32k prefill cells.
+    """
+    B, T, H, hd = q.shape
+    hdv = v.shape[-1]
+    KV = k.shape[2]
+    G = H // KV
+    assert T % chunk == 0, (T, chunk)
+    n = T // chunk
+    scale = hd ** -0.5
+
+    qb = q.reshape(B, n, chunk, H, hd)
+    kb = k.reshape(B, n, chunk, KV, hd)
+    vb = v.reshape(B, n, chunk, KV, hdv)
+
+    def per_qblock(qi, q_blk):
+        # q_blk: [B, chunk, H, hd]
+        qg = q_blk.reshape(B, chunk, KV, G, hd)
+        q_pos = qi * chunk + jnp.arange(chunk)
+
+        @jax.checkpoint
+        def step(carry, inp):
+            m, l, acc = carry
+            kj, (k_blk, v_blk) = inp
+            s = jnp.einsum("btkgh,bskh->bkgts", qg, k_blk).astype(jnp.float32)
+            s = s * scale
+            k_pos = kj * chunk + jnp.arange(chunk)
+            mask = (k_pos[None, :] <= q_pos[:, None]) & (kj <= qi)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgts,bskh->bkgth", p.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, chunk, hdv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            step,
+            (m0, l0, a0),
+            (jnp.arange(n), (kb.swapaxes(0, 1), vb.swapaxes(0, 1))),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, chunk, H, hdv)
+
+    per_qblock = jax.checkpoint(per_qblock, static_argnums=())
+    outs = jax.lax.map(
+        lambda i: per_qblock(i, qb[:, i]), jnp.arange(n)
+    )  # [n, B, chunk, H, hdv]
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, T, H, hdv).astype(q.dtype)
+
+
+def gqa_forward(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,             # [B, T, d]
+    rope_theta: float,
+    chunk: Optional[int] = None,
+) -> jnp.ndarray:
+    B, T, _ = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    pos = jnp.arange(T)
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+    if chunk is not None and T > chunk and T % chunk == 0:
+        ctx = chunked_causal_attention(q, k, v, chunk)
+    else:
+        ctx = sdpa_causal(q, k, v, pos)
+    return jnp.einsum("bthk,hkd->btd", ctx, p["wo"])
+
+
+def gqa_init_cache(
+    batch: int, max_len: int, n_kv: int, hd: int, dtype
+) -> Dict[str, jnp.ndarray]:
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, hd), dtype),
+    }
+
+
+def gqa_decode_step(
+    p: Dict[str, jnp.ndarray],
+    cache: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,             # [B, 1, d]
+    pos: jnp.ndarray,           # scalar int32 — index of the new token
+    rope_theta: float,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    q = apply_rope(q, pos[None], rope_theta)
+    k = apply_rope(k, pos[None], rope_theta)
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1),
+    }
+    ctx = sdpa_causal(q, cache["k"], cache["v"], pos[None], k_valid_len=pos + 1)
+    return jnp.einsum("bthk,hkd->btd", ctx, p["wo"]), cache
+
+
+def chunked_bidir_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, chunk: int
+) -> jnp.ndarray:
+    """Online-softmax non-causal attention, O(T·chunk) memory (enc side)."""
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    assert T % chunk == 0
+    n = T // chunk
+    scale = hd ** -0.5
+    qb = q.reshape(B, n, chunk, H, hd)
+    kb = k.reshape(B, n, chunk, KV, hd).swapaxes(0, 1)
+    vb = v.reshape(B, n, chunk, KV, hd).swapaxes(0, 1)
+
+    def per_qblock(q_blk):
+        qg = q_blk.reshape(B, chunk, KV, G, hd)
+
+        @jax.checkpoint
+        def step(carry, kv):
+            m, l, acc = carry
+            k_blk, v_blk = kv
+            s = jnp.einsum("btkgh,bskh->bkgts", qg, k_blk).astype(jnp.float32)
+            s = s * scale
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p_ = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p_.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgts,bskh->bkgth", p_.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, chunk, H, hd)
+
+    per_qblock = jax.checkpoint(per_qblock)
+    outs = jax.lax.map(lambda i: per_qblock(qb[:, i]), jnp.arange(n))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, T, H, hd).astype(q.dtype)
+
+
+def bidir_attention(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    rope_theta: float,
+    chunk: Optional[int] = None,
+) -> jnp.ndarray:
+    """Non-causal self-attention (encoder side of enc-dec)."""
+    B, T, _ = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    pos = jnp.arange(T)
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+    if chunk is not None and T > chunk and T % chunk == 0:
+        ctx = chunked_bidir_attention(q, k, v, chunk)
+        return jnp.einsum("bthk,hkd->btd", ctx, p["wo"])
+    KV = k.shape[2]
+    qg = _group(q, KV)
+    s = jnp.einsum("btkgh,bskh->bkgts", qg, k).astype(jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+    pr = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum("bkgts,bskh->btkgh", pr, v)
+    return jnp.einsum(
+        "bthk,hkd->btd", ctx.reshape(B, T, q.shape[2], q.shape[3]), p["wo"]
+    )
+
+
+def cross_attention(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,             # [B, Tq, d] decoder states
+    enc: jnp.ndarray,           # [B, Te, d] encoder states
+) -> jnp.ndarray:
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", enc, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc, p["wv"])
+    KV = k.shape[2]
+    qg = _group(q, KV)
+    s = jnp.einsum("btkgh,bskh->bkgts", qg, k).astype(jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+    pr = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum("bkgts,bskh->btkgh", pr, v)
+    B, Tq = x.shape[:2]
+    return jnp.einsum(
+        "bthk,hkd->btd", ctx.reshape(B, Tq, q.shape[2], q.shape[3]), p["wo"]
+    )

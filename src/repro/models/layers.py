@@ -1,0 +1,146 @@
+"""Shared building blocks: ParamSpec trees, norms, RoPE, MLP.
+
+Single-source-of-truth parameter system: every model module builds a nested
+dict of :class:`ParamSpec` (shape + **logical axes** + init law).  From that
+one tree we derive
+  * real initialized params           (``init_params``),
+  * abstract ShapeDtypeStructs        (``abstract_params`` — dry-run, no alloc),
+  * logical-axis tree                 (``axes_tree`` — mapped to mesh axes by
+                                       ``repro.distributed.sharding``).
+The three can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis name per dim (None = replicated)
+    init: str = "normal"              # normal | zeros | ones
+    scale: Optional[float] = None     # default: 1/sqrt(fan_in = shape[-2] or [-1])
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_init(spec: ParamSpec, key: jax.Array, dtype) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key: jax.Array, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_leaf_init(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs, is_leaf=_is_spec
+    )
+
+
+def axes_tree(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Ops
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., T, H, hd]; positions: broadcastable to [..., T]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                              # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs     # [..., T, hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    """SwiGLU MLP: down( silu(x·gate) ⊙ (x·up) )."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def mlp_specs(d: int, d_ff: int, kind: str = "swiglu") -> Dict[str, ParamSpec]:
+    if kind == "gelu":
+        return {
+            "up": ParamSpec((d, d_ff), ("embed", "ffn")),
+            "down": ParamSpec((d_ff, d), ("ffn", "embed")),
+        }
+    return {
+        "gate": ParamSpec((d, d_ff), ("embed", "ffn")),
+        "up": ParamSpec((d, d_ff), ("embed", "ffn")),
+        "down": ParamSpec((d_ff, d), ("ffn", "embed")),
+    }
+
+
+def mlp_forward(x, p) -> "jnp.ndarray":
+    """Dispatch on the param dict: SwiGLU if a gate matrix is present."""
+    if "gate" in p:
+        return swiglu(x, p["gate"], p["up"], p["down"])
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["up"]))
+    return jnp.einsum("...f,fd->...d", h, p["down"])
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, mask=None) -> jnp.ndarray:
+    """Mean token NLL; logits [..., V] (softmax in f32), labels int [...]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def stacked(spec_dict: Dict[str, Any], n: int, axis_name: str = "layers"):
+    """Prepend a stacking dim (for scan-over-layers) to every spec in a tree."""
+
+    def add(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(
+            (n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale
+        )
+
+    return jax.tree.map(add, spec_dict, is_leaf=_is_spec)

@@ -1,0 +1,242 @@
+"""Mamba-2 block via SSD (state-space duality), chunked — arXiv:2405.21060.
+
+The SSD form computes ``y = SSM(A, B, C)(x)`` as block-diagonal (intra-chunk,
+quadratic in chunk length, MXU-friendly) plus low-rank inter-chunk terms
+carried by a sequential scan over chunk states — sub-quadratic in T overall,
+O(T·Q) FLOPs with chunk Q.  Decode is the classic O(1)/token recurrence on the
+``[B, H, P, N]`` state.
+
+Layout: d_inner = expand·d, H heads of dim P = head_dim, G state groups of
+size N = d_state.  In-projection produces (z, x, B, C, dt); depthwise causal
+conv of width w over (x, B, C); gated RMSNorm before out-projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import ParamSpec, rms_norm
+
+
+def ssm_dims(d: int, s: SSMConfig):
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, H, conv_dim
+
+
+def mamba2_specs(d: int, s: SSMConfig) -> Dict[str, ParamSpec]:
+    """Projections are SPLIT (z, x, BC, dt) rather than one packed in_proj so
+    each output shards cleanly: z/x on the head ("ffn"→TP) dim, B/C/dt
+    replicated (they are small and feed group-broadcast einsums).  A packed
+    projection sharded on the fused dim forces GSPMD to rematerialize at every
+    slice — measured 10s-of-GB on the 398B Jamba before the split."""
+    d_inner, H, conv_dim = ssm_dims(d, s)
+    gN = s.n_groups * s.d_state
+    return {
+        "z_proj": ParamSpec((d, d_inner), ("embed", "ffn")),
+        "x_proj": ParamSpec((d, d_inner), ("embed", "ffn")),
+        "bc_proj": ParamSpec((d, 2 * gN), ("embed", None)),
+        "dt_proj": ParamSpec((d, H), ("embed", None)),
+        "conv_x_w": ParamSpec((s.conv_width, d_inner), (None, "ffn"), scale=0.5),
+        "conv_x_b": ParamSpec((d_inner,), ("ffn",), init="zeros"),
+        "conv_bc_w": ParamSpec((s.conv_width, 2 * gN), (None, None), scale=0.5),
+        "conv_bc_b": ParamSpec((2 * gN,), (None,), init="zeros"),
+        "A_log": ParamSpec((H,), (None,), init="zeros"),
+        "D": ParamSpec((H,), (None,), init="ones"),
+        "dt_bias": ParamSpec((H,), (None,), init="zeros"),
+        "norm": ParamSpec((d_inner,), ("ffn",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d), ("ffn", "embed")),
+    }
+
+
+def _project(p, xin, s: SSMConfig):
+    gN = s.n_groups * s.d_state
+    z = jnp.einsum("btd,dk->btk", xin, p["z_proj"])
+    x = jnp.einsum("btd,dk->btk", xin, p["x_proj"])
+    bc = jnp.einsum("btd,dk->btk", xin, p["bc_proj"])
+    dt = jnp.einsum("btd,dk->btk", xin, p["dt_proj"])
+    return z, x, bc[..., :gN], bc[..., gN:], dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over time: xbc [B, T, D], w [width, D]."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu(out + b)
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular segment sums: out[..., i, j] = Σ_{j<k≤i} x[..., k]."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,    # [B, T, H, P]
+    dt: jnp.ndarray,   # [B, T, H]   (post-softplus)
+    A: jnp.ndarray,    # [H]         (negative)
+    B_: jnp.ndarray,   # [B, T, G, N]
+    C_: jnp.ndarray,   # [B, T, G, N]
+    chunk: int,
+    h0: jnp.ndarray = None,  # [B, H, P, N] initial state
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y [B,T,H,P], final state [B,H,P,N])."""
+    Bb, T, H, P = x.shape
+    G, N = B_.shape[-2:]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    rep = H // G
+
+    xc = x.reshape(Bb, nc, chunk, H, P)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+    Bc = B_.reshape(Bb, nc, chunk, G, N)
+    Cc = C_.reshape(Bb, nc, chunk, G, N)
+    dA = dtc * A[None, None, None, :]                       # [B,nc,Q,H]
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (quadratic in Q — the MXU part).  All [*,H,Q,Q]-sized
+    # intermediates are built with GROUPED einsums (H = G×rep as two indices)
+    # instead of jnp.repeat: the repeat materializes a replicated head-major
+    # tensor and breaks the TP head-sharding inherited from x — measured
+    # tens of GB on Jamba-398B prefill.
+    Lh = jnp.exp(
+        _segsum(dA.reshape(Bb, nc, chunk, G, rep).transpose(0, 1, 3, 4, 2))
+    )                                                        # [B,nc,G,r,Q,Q]
+    CB = jnp.einsum("bnqgs,bnkgs->bngqk", Cc, Bc)            # [B,nc,G,Q,K]
+    xdt = xc * dtc[..., None]                                # [B,nc,Q,H,P]
+    xdt_g = xdt.reshape(Bb, nc, chunk, G, rep, P)
+    y_diag = jnp.einsum(
+        "bngqk,bngrqk,bnkgrp->bnqgrp",
+        CB.astype(jnp.float32),
+        Lh,
+        xdt_g.astype(jnp.float32),
+    ).reshape(Bb, nc, chunk, H, P)
+
+    # chunk states (B broadcast from G groups to H heads via grouped einsum)
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)     # [B,nc,Q,H]
+    xdtd_g = (xdt * decay_states[..., None]).reshape(
+        Bb, nc, chunk, G, rep, P
+    )
+    states = jnp.einsum(
+        "bnqgs,bnqgrp->bngrps",
+        Bc.astype(jnp.float32),
+        xdtd_g.astype(jnp.float32),
+    ).reshape(Bb, nc, H, P, N)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])               # [B,nc,H]
+
+    def scan_fn(h, inp):
+        st, dec = inp                                        # [B,H,P,N], [B,H]
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        scan_fn,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                # [B,nc,H,P,N]
+
+    # off-diagonal contribution (grouped: no head-repeat materialization)
+    state_decay = jnp.exp(dA_cs)                            # [B,nc,Q,H]
+    h_prev_g = h_prev.reshape(Bb, nc, G, rep, P, N)
+    y_off = jnp.einsum(
+        "bnqgs,bngrps->bnqgrp", Cc.astype(jnp.float32), h_prev_g
+    ).reshape(Bb, nc, chunk, H, P) * state_decay[..., None]
+
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(Bb, T, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def mamba2_forward(
+    p: Dict[str, jnp.ndarray], xin: jnp.ndarray, s: SSMConfig
+) -> jnp.ndarray:
+    """Full-sequence forward (training / prefill)."""
+    d = xin.shape[-1]
+    d_inner, H, conv_dim = ssm_dims(d, s)
+    gN = s.n_groups * s.d_state
+    z, x, B_, C_, dt = _project(p, xin, s)
+    x = _causal_conv(x, p["conv_x_w"], p["conv_x_b"])
+    bc = _causal_conv(
+        jnp.concatenate([B_, C_], axis=-1), p["conv_bc_w"], p["conv_bc_b"]
+    )
+    B_, C_ = bc[..., :gN], bc[..., gN:]
+    Bb, T = x.shape[:2]
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(
+        x.reshape(Bb, T, H, s.head_dim),
+        dt,
+        A,
+        B_.reshape(Bb, T, s.n_groups, s.d_state),
+        C_.reshape(Bb, T, s.n_groups, s.d_state),
+        min(s.chunk, T),
+    )
+    y = y + x.reshape(Bb, T, H, s.head_dim) * p["D"][None, None, :, None]
+    y = y.reshape(Bb, T, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return jnp.einsum("btk,kd->btd", y, p["out_proj"])
+
+
+def mamba2_init_cache(batch: int, d: int, s: SSMConfig, dtype):
+    d_inner, H, conv_dim = ssm_dims(d, s)
+    gN = s.n_groups * s.d_state
+    return {
+        "conv_x": jnp.zeros((batch, s.conv_width - 1, d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, s.conv_width - 1, 2 * gN), dtype),
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def mamba2_decode_step(
+    p: Dict[str, jnp.ndarray],
+    cache: Dict[str, jnp.ndarray],
+    xin: jnp.ndarray,   # [B, 1, d]
+    s: SSMConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    d = xin.shape[-1]
+    d_inner, H, conv_dim = ssm_dims(d, s)
+    gN = s.n_groups * s.d_state
+    z, x, B_, C_, dt = _project(p, xin, s)
+    win_x = jnp.concatenate([cache["conv_x"], x], axis=1)
+    x = jax.nn.silu(
+        (win_x * p["conv_x_w"][None]).sum(axis=1, keepdims=True) + p["conv_x_b"]
+    )
+    bc_new = jnp.concatenate([B_, C_], axis=-1)
+    win_bc = jnp.concatenate([cache["conv_bc"], bc_new], axis=1)
+    bc = jax.nn.silu(
+        (win_bc * p["conv_bc_w"][None]).sum(axis=1, keepdims=True)
+        + p["conv_bc_b"]
+    )
+    B_, C_ = bc[..., :gN], bc[..., gN:]
+    cache_conv_x, cache_conv_bc = win_x[:, 1:], win_bc[:, 1:]
+    Bb = x.shape[0]
+    dt = jax.nn.softplus(dt + p["dt_bias"])[:, 0]            # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = x.reshape(Bb, H, s.head_dim).astype(jnp.float32)
+    rep = H // s.n_groups
+    Bh = jnp.repeat(B_.reshape(Bb, s.n_groups, s.d_state), rep, axis=1)
+    Ch = jnp.repeat(C_.reshape(Bb, s.n_groups, s.d_state), rep, axis=1)
+    decay = jnp.exp(dt * A[None, :]).astype(jnp.float32)     # [B,H]
+    h = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bhs->bhps", xh * dt[..., None], Bh.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhps,bhs->bhp", h, Ch.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(Bb, 1, d_inner).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("btk,kd->btd", y, p["out_proj"])
+    return out, {"conv_x": cache_conv_x, "conv_bc": cache_conv_bc, "ssm": h}

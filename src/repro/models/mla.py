@@ -1,0 +1,130 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+KV state is compressed to a per-token latent ``c_kv ∈ R^{kv_lora}`` plus one
+shared RoPE key ``k_rope ∈ R^{rope}`` — the decode cache holds only
+``kv_lora + rope`` floats/token (vs ``2·KV·hd`` for GQA).  Decode uses the
+**absorbed** form: scores are taken directly against the latent via
+``qᵀW_uk``-absorbed queries, and the attention output stays in latent space
+until the final up-projection — so decode reads O(kv_lora) bytes/token.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models.layers import ParamSpec, apply_rope
+
+NEG_INF = -1e30
+
+
+def mla_specs(d: int, n_heads: int, m: MLAConfig) -> Dict[str, ParamSpec]:
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "q_down": ParamSpec((d, m.q_lora_rank), ("embed", "q_lora")),
+        "q_norm": ParamSpec((m.q_lora_rank,), ("q_lora",), init="ones"),
+        "q_up": ParamSpec((m.q_lora_rank, n_heads, qk), ("q_lora", "heads", None)),
+        "kv_down": ParamSpec(
+            (d, m.kv_lora_rank + m.qk_rope_dim), ("embed", "kv_lora")
+        ),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), ("kv_lora",), init="ones"),
+        "k_up": ParamSpec(
+            (m.kv_lora_rank, n_heads, m.qk_nope_dim), ("kv_lora", "heads", None)
+        ),
+        "v_up": ParamSpec(
+            (m.kv_lora_rank, n_heads, m.v_head_dim), ("kv_lora", "heads", None)
+        ),
+        "wo": ParamSpec((n_heads, m.v_head_dim, d), ("heads", None, "embed")),
+    }
+
+
+def _project(p, x, m: MLAConfig, positions):
+    """Shared q/kv projections.  Returns (q_nope, q_rope, c_kv, k_rope)."""
+    from repro.models.layers import rms_norm
+
+    cq = rms_norm(jnp.einsum("btd,dr->btr", x, p["q_down"]), p["q_norm"])
+    q = jnp.einsum("btr,rhk->bthk", cq, p["q_up"])
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    q_rope = apply_rope(q_rope, positions, 10_000.0)
+
+    ckv_full = jnp.einsum("btd,dr->btr", x, p["kv_down"])
+    c_kv = rms_norm(ckv_full[..., : m.kv_lora_rank], p["kv_norm"])
+    k_rope = ckv_full[..., m.kv_lora_rank :][:, :, None, :]      # [B,T,1,rope]
+    k_rope = apply_rope(k_rope, positions, 10_000.0)[:, :, 0]     # [B,T,rope]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(
+    p: Dict[str, jnp.ndarray], x: jnp.ndarray, m: MLAConfig,
+    chunk=None,
+) -> jnp.ndarray:
+    """Training/prefill path (materializes per-head K/V; causal).  With
+    ``chunk`` the flash-style online-softmax path bounds memory at O(T·chunk)
+    — required for the 32k prefill cells (dense MLA scores are O(H·T²))."""
+    from repro.models.attention import chunked_causal_attention
+
+    B, T, _ = x.shape
+    pos = jnp.arange(T)
+    q_nope, q_rope, c_kv, k_rope = _project(p, x, m, pos)
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["k_up"])
+    v = jnp.einsum("btr,rhk->bthk", c_kv, p["v_up"])
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    if chunk is not None and T > chunk and T % chunk == 0:
+        H = q_nope.shape[2]
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, T, H, m.qk_rope_dim))],
+            axis=-1,
+        )
+        ctx = chunked_causal_attention(q, k, v, chunk)
+        return jnp.einsum("bthk,hkd->btd", ctx, p["wo"])
+    s = (
+        jnp.einsum("bthk,bshk->bhts", q_nope, k_nope)
+        + jnp.einsum("bthk,bsk->bhts", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    mask = pos[None, :] <= pos[:, None]
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum("bhts,bshk->bthk", pr, v)
+    return jnp.einsum("bthk,hkd->btd", ctx, p["wo"])
+
+
+def mla_init_cache(batch: int, max_len: int, m: MLAConfig, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode_step(
+    p: Dict[str, jnp.ndarray],
+    cache: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,            # [B, 1, d]
+    pos: jnp.ndarray,          # scalar
+    m: MLAConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Absorbed-form decode: attention runs entirely in latent space."""
+    q_nope, q_rope, c_kv_new, k_rope_new = _project(p, x, m, pos[None])
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv_new, pos, axis=1
+        ),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope_new, pos, axis=1
+        ),
+    }
+    # absorb W_uk into the query:  q̃ = q_nope · W_uk  ∈ latent space
+    q_lat = jnp.einsum("bthk,rhk->bthr", q_nope, p["k_up"])       # [B,1,H,r]
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    s = (
+        jnp.einsum("bthr,bsr->bhts", q_lat, cache["c_kv"])
+        + jnp.einsum("bthk,bsk->bhts", q_rope, cache["k_rope"])
+    ).astype(jnp.float32) * scale
+    valid = jnp.arange(cache["c_kv"].shape[1])[None, :] <= pos
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhts,bsr->bthr", pr, cache["c_kv"])     # latent ctx
+    ctx = jnp.einsum("bthr,rhk->bthk", ctx_lat, p["v_up"])
+    return jnp.einsum("bthk,hkd->btd", ctx, p["wo"]), cache

@@ -1,0 +1,533 @@
+"""Unified LM: five families behind one functional interface.
+
+  * ``dense`` / ``moe`` / ``vlm`` / ``audio-decoder`` — DecoderLM (GQA or MLA
+    attention, dense-MLP or MoE FFN), scan-over-layers.
+  * ``ssm``     — Mamba-2 (SSD) stack.
+  * ``hybrid``  — Jamba-style period-``attn_every`` super-blocks (1 attention +
+    N-1 mamba sublayers, MoE on alternate sublayers), scan over super-blocks.
+  * ``encdec``  — Whisper-style encoder–decoder (frontend stubbed: the caller
+    provides frame embeddings).
+
+Interface (all pure functions of (config, params, ...)):
+  ``specs(cfg)`` → ParamSpec tree;  ``init/abstract/axes`` derive from it.
+  ``forward(cfg, params, batch)`` → logits           (train / prefill)
+  ``init_cache(cfg, batch, max_len, dtype)``         (decode state)
+  ``decode_step(cfg, params, cache, tokens, pos)`` → (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    ParamSpec,
+    abstract_params,
+    axes_tree,
+    cross_entropy,
+    init_params,
+    mlp_forward,
+    mlp_specs,
+    param_count,
+    rms_norm,
+    stacked,
+    swiglu,
+)
+
+
+# ---------------------------------------------------------------------------
+# Spec trees
+# ---------------------------------------------------------------------------
+
+
+def _mixer_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.mla is not None:
+        return mla_mod.mla_specs(cfg.d_model, cfg.n_heads, cfg.mla)
+    return attn.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+
+
+def _ffn_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.moe and cfg.moe.n_experts:
+        return moe_mod.moe_specs(cfg.d_model, cfg.moe)
+    return mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp_type)
+
+
+def _decoder_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "attn": _mixer_specs(cfg),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "mlp": _ffn_specs(cfg),
+    }
+
+
+def _ssm_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "mixer": m2.mamba2_specs(cfg.d_model, cfg.ssm),
+    }
+
+
+def _hybrid_superblock_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    period = cfg.attn_every
+    n_moe = period // 2
+    n_dense = period - n_moe
+    return {
+        "attn_ln": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "attn": attn.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd),
+        "mamba_ln": stacked(
+            {"g": ParamSpec((cfg.d_model,), ("embed",), init="ones")}, period - 1
+        )["g"],
+        "mamba": stacked(m2.mamba2_specs(cfg.d_model, cfg.ssm), period - 1),
+        "mlp_ln": stacked(
+            {"g": ParamSpec((cfg.d_model,), ("embed",), init="ones")}, n_dense
+        )["g"],
+        "mlp": stacked(mlp_specs(cfg.d_model, cfg.d_ff), n_dense),
+        "moe_ln": stacked(
+            {"g": ParamSpec((cfg.d_model,), ("embed",), init="ones")}, n_moe
+        )["g"],
+        "moe": stacked(moe_mod.moe_specs(cfg.d_model, cfg.moe), n_moe),
+    }
+
+
+def _encdec_block_specs(cfg: ModelConfig, cross: bool) -> Dict[str, Any]:
+    s = {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "attn": attn.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp_type),
+    }
+    if cross:
+        s["ln_x"] = ParamSpec((cfg.d_model,), ("embed",), init="ones")
+        s["xattn"] = attn.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+    return s
+
+
+def specs(cfg: ModelConfig) -> Dict[str, Any]:
+    V, d = cfg.vocab_padded, cfg.d_model
+    tree: Dict[str, Any] = {
+        "embed": ParamSpec((V, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamSpec((d, V), ("embed", "vocab"))
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        tree["blocks"] = stacked(_decoder_block_specs(cfg), cfg.n_layers)
+    elif cfg.family == "ssm":
+        tree["blocks"] = stacked(_ssm_block_specs(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        assert cfg.n_layers % cfg.attn_every == 0
+        tree["blocks"] = stacked(
+            _hybrid_superblock_specs(cfg), cfg.n_layers // cfg.attn_every
+        )
+    elif cfg.family == "encdec":
+        tree["enc_blocks"] = stacked(
+            _encdec_block_specs(cfg, cross=False), cfg.n_enc_layers
+        )
+        tree["enc_norm"] = ParamSpec((d,), ("embed",), init="ones")
+        tree["blocks"] = stacked(_encdec_block_specs(cfg, cross=True), cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+    return tree
+
+
+def init(cfg: ModelConfig, key: jax.Array):
+    return init_params(specs(cfg), key, dtype=jnp.dtype(cfg.param_dtype))
+
+
+def abstract(cfg: ModelConfig):
+    return abstract_params(specs(cfg), dtype=jnp.dtype(cfg.param_dtype))
+
+
+def axes(cfg: ModelConfig):
+    return axes_tree(specs(cfg))
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return param_count(specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "block":
+        return jax.checkpoint(fn, prevent_cse=False)
+    return fn
+
+
+def _decoder_block(cfg: ModelConfig, p, x, chunk):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        x = x + mla_mod.mla_forward(p["attn"], h, cfg.mla, chunk=chunk)
+    else:
+        x = x + attn.gqa_forward(p["attn"], h, cfg.rope_theta, chunk=chunk)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe and cfg.moe.n_experts:
+        y, _aux = moe_mod.moe_forward(p["mlp"], h, cfg.moe)
+        x = x + y
+    else:
+        x = x + mlp_forward(h, p["mlp"])
+    return x
+
+
+def _ssm_block(cfg: ModelConfig, p, x):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    return x + m2.mamba2_forward(p["mixer"], h, cfg.ssm)
+
+
+def _hybrid_superblock(cfg: ModelConfig, p, x, chunk):
+    # Each SUBLAYER is checkpointed individually: with only superblock-level
+    # remat, the backward pass keeps all 7 mamba sublayers' SSD residuals
+    # alive simultaneously (~5 GB each on Jamba-398B) — sublayer remat keeps
+    # one alive at a time.
+    period = cfg.attn_every
+
+    def _attn_sub(p_, h_):
+        a = rms_norm(h_, p_["attn_ln"], cfg.norm_eps)
+        return attn.gqa_forward(p_["attn"], a, cfg.rope_theta, chunk=chunk)
+
+    def _mamba_sub(sub, ln, h_):
+        a = rms_norm(h_, ln, cfg.norm_eps)
+        return m2.mamba2_forward(sub, a, cfg.ssm)
+
+    def _moe_sub(sub, ln, h_):
+        a = rms_norm(h_, ln, cfg.norm_eps)
+        y, _aux = moe_mod.moe_forward(sub, a, cfg.moe)
+        return y
+
+    def _mlp_sub(sub, ln, h_):
+        a = rms_norm(h_, ln, cfg.norm_eps)
+        return mlp_forward(a, sub)
+
+    ck = (lambda f: jax.checkpoint(f, prevent_cse=False)) if cfg.remat == "block" else (lambda f: f)
+    _attn_sub, _mamba_sub = ck(_attn_sub), ck(_mamba_sub)
+    _moe_sub, _mlp_sub = ck(_moe_sub), ck(_mlp_sub)
+
+    mi, di, oi = 0, 0, 0
+    for i in range(period):
+        if i == 0:
+            x = x + _attn_sub(p, x)
+        else:
+            sub = jax.tree.map(lambda a: a[mi], p["mamba"])
+            x = x + _mamba_sub(sub, p["mamba_ln"][mi], x)
+            mi += 1
+        if i % 2 == 1:
+            sub = jax.tree.map(lambda a: a[oi], p["moe"])
+            x = x + _moe_sub(sub, p["moe_ln"][oi], x)
+            oi += 1
+        else:
+            sub = jax.tree.map(lambda a: a[di], p["mlp"])
+            x = x + _mlp_sub(sub, p["mlp_ln"][di], x)
+            di += 1
+    return x
+
+
+def _constrain(x, act_spec):
+    if act_spec is not None:
+        return jax.lax.with_sharding_constraint(x, act_spec)
+    return x
+
+
+def _run_stack(cfg: ModelConfig, blocks, x, body, act_spec=None,
+               body_has_remat=False):
+    if not body_has_remat:  # hybrid super-blocks checkpoint per SUBLAYER
+        body = _maybe_remat(body, cfg)
+
+    def step(h, p):
+        return _constrain(body(p, h), act_spec), None
+
+    x, _ = jax.lax.scan(step, x, blocks)
+    return x
+
+
+def _encoder(cfg: ModelConfig, params, frames, chunk=None, act_spec=None):
+    def body(p, h):
+        a = rms_norm(h, p["ln1"], cfg.norm_eps)
+        h = h + attn.bidir_attention(p["attn"], a, cfg.rope_theta, chunk=chunk)
+        a = rms_norm(h, p["ln2"], cfg.norm_eps)
+        return h + mlp_forward(a, p["mlp"])
+
+    x = _run_stack(cfg, params["enc_blocks"], frames, body, act_spec)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def hidden_states(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, jnp.ndarray],
+    chunk: Optional[int] = None,
+    act_spec=None,
+) -> jnp.ndarray:
+    """Embed inputs and run the stack; returns final hidden [B, T, d]."""
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["vision_embeds"].astype(x.dtype), x], axis=1)
+    x = _constrain(x, act_spec)
+    if cfg.family == "encdec":
+        enc = _encoder(cfg, params, batch["frames"].astype(x.dtype), chunk,
+                       act_spec)
+
+        def body(p, h):
+            a = rms_norm(h, p["ln1"], cfg.norm_eps)
+            h = h + attn.gqa_forward(p["attn"], a, cfg.rope_theta, chunk=chunk)
+            a = rms_norm(h, p["ln_x"], cfg.norm_eps)
+            h = h + attn.cross_attention(p["xattn"], a, enc)
+            a = rms_norm(h, p["ln2"], cfg.norm_eps)
+            return h + mlp_forward(a, p["mlp"])
+
+        x = _run_stack(cfg, params["blocks"], x, body, act_spec)
+    elif cfg.family == "ssm":
+        x = _run_stack(
+            cfg, params["blocks"], x, lambda p, h: _ssm_block(cfg, p, h), act_spec
+        )
+    elif cfg.family == "hybrid":
+        # sublayer-level checkpoints live inside the superblock; wrapping the
+        # whole superblock again would nest remat (measured: 57.9 → 121 GB on
+        # Jamba train — recompute-of-recompute)
+        x = _run_stack(
+            cfg,
+            params["blocks"],
+            x,
+            lambda p, h: _hybrid_superblock(cfg, p, h, chunk),
+            act_spec,
+            body_has_remat=True,
+        )
+    else:
+        x = _run_stack(
+            cfg,
+            params["blocks"],
+            x,
+            lambda p, h: _decoder_block(cfg, p, h, chunk),
+            act_spec,
+        )
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def logits_of(cfg: ModelConfig, params, hidden: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return jnp.einsum("btd,vd->btv", hidden, params["embed"])
+    return jnp.einsum("btd,dv->btv", hidden, params["lm_head"])
+
+
+def forward(
+    cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray], chunk=None,
+    act_spec=None,
+) -> jnp.ndarray:
+    return logits_of(
+        cfg, params, hidden_states(cfg, params, batch, chunk, act_spec)
+    )
+
+
+def mask_vocab_pad(cfg: ModelConfig, logits: jnp.ndarray) -> jnp.ndarray:
+    """Kill the padded vocab tail (see ModelConfig.pad_vocab_to)."""
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    v = jnp.arange(cfg.vocab_padded) < cfg.vocab
+    return jnp.where(v, logits, -1e30)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, chunk=None, act_spec=None) -> jnp.ndarray:
+    """Next-token NLL.  VLM: loss on text positions only."""
+    logits = mask_vocab_pad(cfg, forward(cfg, params, batch, chunk, act_spec))
+    tokens = batch["tokens"]
+    if cfg.family == "vlm":
+        logits = logits[:, batch["vision_embeds"].shape[1] :]
+    labels = tokens[:, 1:]
+    return cross_entropy(logits[:, :-1], labels, batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        if cfg.mla is not None:
+            one = mla_mod.mla_init_cache(batch, max_len, cfg.mla, dtype)
+        else:
+            one = attn.gqa_init_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one
+        )
+    if cfg.family == "ssm":
+        one = m2.mamba2_init_cache(batch, cfg.d_model, cfg.ssm, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one
+        )
+    if cfg.family == "hybrid":
+        nb = cfg.n_layers // cfg.attn_every
+        a_c = attn.gqa_init_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, dtype)
+        m_c = m2.mamba2_init_cache(batch, cfg.d_model, cfg.ssm, dtype)
+        return {
+            "attn": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (nb,) + a.shape), a_c
+            ),
+            "mamba": jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (nb, cfg.attn_every - 1) + a.shape
+                ),
+                m_c,
+            ),
+        }
+    if cfg.family == "encdec":
+        self_c = attn.gqa_init_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, dtype)
+        cache = {
+            "self": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), self_c
+            ),
+            # cross K/V per layer, filled by `encode`:
+            "cross_k": jnp.zeros(
+                (cfg.n_layers, batch, cfg.enc_context, cfg.n_kv_heads, cfg.hd),
+                dtype,
+            ),
+            "cross_v": jnp.zeros(
+                (cfg.n_layers, batch, cfg.enc_context, cfg.n_kv_heads, cfg.hd),
+                dtype,
+            ),
+        }
+        return cache
+    raise ValueError(cfg.family)
+
+
+def encode(cfg: ModelConfig, params, frames: jnp.ndarray, cache):
+    """encdec: run the encoder, precompute per-layer cross K/V into the cache."""
+    enc = _encoder(cfg, params, frames)
+
+    def kv(p):
+        k = jnp.einsum("btd,dhk->bthk", enc, p["xattn"]["wk"])
+        v = jnp.einsum("btd,dhk->bthk", enc, p["xattn"]["wv"])
+        return k, v
+
+    ks, vs = jax.vmap(kv)(params["blocks"])
+    return {**cache, "cross_k": ks.astype(cache["cross_k"].dtype),
+            "cross_v": vs.astype(cache["cross_v"].dtype)}
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params,
+    cache,
+    tokens: jnp.ndarray,   # [B, 1] int32
+    pos: jnp.ndarray,      # scalar int32
+) -> Tuple[jnp.ndarray, Any]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+
+        def step(h, inp):
+            p, c = inp
+            a = rms_norm(h, p["ln1"], cfg.norm_eps)
+            if cfg.mla is not None:
+                y, c = mla_mod.mla_decode_step(p["attn"], c, a, pos, cfg.mla)
+            else:
+                y, c = attn.gqa_decode_step(p["attn"], c, a, pos, cfg.rope_theta)
+            h = h + y
+            a = rms_norm(h, p["ln2"], cfg.norm_eps)
+            if cfg.moe and cfg.moe.n_experts:
+                y, _ = moe_mod.moe_forward(p["mlp"], a, cfg.moe)
+                h = h + y
+            else:
+                h = h + mlp_forward(a, p["mlp"])
+            return h, c
+
+        x, cache = jax.lax.scan(step, x, (params["blocks"], cache))
+    elif cfg.family == "ssm":
+
+        def step(h, inp):
+            p, c = inp
+            a = rms_norm(h, p["ln"], cfg.norm_eps)
+            y, c = m2.mamba2_decode_step(p["mixer"], c, a, cfg.ssm)
+            return h + y, c
+
+        x, cache = jax.lax.scan(step, x, (params["blocks"], cache))
+    elif cfg.family == "hybrid":
+        period = cfg.attn_every
+
+        def step(h, inp):
+            p, c = inp
+            mi, di, oi = 0, 0, 0
+            for i in range(period):
+                if i == 0:
+                    a = rms_norm(h, p["attn_ln"], cfg.norm_eps)
+                    y, c_a = attn.gqa_decode_step(
+                        p["attn"], c["attn"], a, pos, cfg.rope_theta
+                    )
+                    c = {**c, "attn": c_a}
+                    h = h + y
+                else:
+                    sub = jax.tree.map(lambda z: z[mi], p["mamba"])
+                    subc = jax.tree.map(lambda z: z[mi], c["mamba"])
+                    a = rms_norm(h, p["mamba_ln"][mi], cfg.norm_eps)
+                    y, subc = m2.mamba2_decode_step(sub, subc, a, cfg.ssm)
+                    c = {
+                        **c,
+                        "mamba": jax.tree.map(
+                            lambda full, new: full.at[mi].set(new),
+                            c["mamba"],
+                            subc,
+                        ),
+                    }
+                    h = h + y
+                    mi += 1
+                if i % 2 == 1:
+                    sub = jax.tree.map(lambda z: z[oi], p["moe"])
+                    a = rms_norm(h, p["moe_ln"][oi], cfg.norm_eps)
+                    y, _ = moe_mod.moe_forward(sub, a, cfg.moe)
+                    h = h + y
+                    oi += 1
+                else:
+                    sub = jax.tree.map(lambda z: z[di], p["mlp"])
+                    a = rms_norm(h, p["mlp_ln"][di], cfg.norm_eps)
+                    h = h + mlp_forward(a, sub)
+                    di += 1
+            return h, c
+
+        x, cache = jax.lax.scan(step, x, (params["blocks"], cache))
+    elif cfg.family == "encdec":
+
+        def step(h, inp):
+            p, c, xk, xv = inp
+            a = rms_norm(h, p["ln1"], cfg.norm_eps)
+            y, c = attn.gqa_decode_step(p["attn"], c, a, pos, cfg.rope_theta)
+            h = h + y
+            a = rms_norm(h, p["ln_x"], cfg.norm_eps)
+            q = jnp.einsum("btd,dhk->bthk", a, p["xattn"]["wq"])
+            KV = xk.shape[2]
+            qg = q.reshape(*q.shape[:2], KV, q.shape[2] // KV, q.shape[3])
+            s = jnp.einsum("btkgh,bskh->bkgts", qg, xk).astype(jnp.float32)
+            s = s * (q.shape[-1] ** -0.5)
+            pr = jax.nn.softmax(s, axis=-1).astype(h.dtype)
+            ctx = jnp.einsum("bkgts,bskh->btkgh", pr, xv)
+            ctx = ctx.reshape(*q.shape)
+            h = h + jnp.einsum("bthk,hkd->btd", ctx, p["xattn"]["wo"])
+            a = rms_norm(h, p["ln2"], cfg.norm_eps)
+            h = h + mlp_forward(a, p["mlp"])
+            return h, c
+
+        x, self_c = jax.lax.scan(
+            step,
+            x,
+            (params["blocks"], cache["self"], cache["cross_k"], cache["cross_v"]),
+        )
+        cache = {**cache, "self": self_c}
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return mask_vocab_pad(cfg, logits_of(cfg, params, x)), cache

@@ -1,0 +1,195 @@
+"""Mixture-of-Experts with sort-free static dispatch + LPT expert placement.
+
+Dispatch is scatter-based with static shapes (TPU-friendly, no one-hot
+[N,E,C] blow-up): top-k routing → per-expert capacity slots via masked
+cumsum → scatter tokens into an ``[E·C, d]`` buffer → batched expert matmul
+``[E, C, d] × [E, d, f]`` → gather-combine.  Tokens over capacity are dropped
+(counted in aux), the standard capacity-factor contract.
+
+**Paper bridge** (DESIGN.md §Arch-applicability): routed-expert load is
+irregular, data-dependent work — the MoE analogue of PBEC sizes.
+``lpt_expert_permutation`` estimates per-expert load from a *sampled* router
+histogram and LPT-packs experts onto EP ranks so each rank serves ≈1/R of the
+tokens — the thesis' double-sampling static balance, re-targeted.  The
+permutation is applied by re-indexing the stacked expert weights (a gather at
+placement time, free at runtime).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import ParamSpec, mlp_specs, swiglu
+
+
+def moe_specs(d: int, m: MoEConfig) -> Dict[str, ParamSpec]:
+    specs: Dict[str, ParamSpec] = {
+        "router": ParamSpec((d, m.n_experts), ("embed", None), scale=0.02),
+        "w_gate": ParamSpec((m.n_experts, d, m.expert_d_ff), ("experts", "embed", "ffn")),
+        "w_up": ParamSpec((m.n_experts, d, m.expert_d_ff), ("experts", "embed", "ffn")),
+        "w_down": ParamSpec((m.n_experts, m.expert_d_ff, d), ("experts", "ffn", "embed")),
+    }
+    if m.n_shared:
+        specs["shared"] = mlp_specs(d, m.n_shared * m.expert_d_ff)
+    return specs
+
+
+def moe_forward(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                 # [B, T, d]
+    m: MoEConfig,
+    expert_perm: Optional[jnp.ndarray] = None,  # int32[E] logical→physical
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    B, T, d = x.shape
+    N = B * T
+    if m.token_chunk and N > m.token_chunk and N % m.token_chunk == 0:
+        # Token-chunked dispatch: bounds the [E·C, d] buffers at chunk
+        # granularity regardless of how GSPMD treats the global scatter
+        # (measured: the un-chunked buffer replicates to 10s of GB on
+        # Jamba-398B prefill).  Expert weights are re-read per chunk — a
+        # collective/HBM cost the §Roofline model charges explicitly.
+        nch = N // m.token_chunk
+        xc = x.reshape(nch, 1, m.token_chunk, d)
+        m_inner = __import__("dataclasses").replace(m, token_chunk=0)
+
+        def one(xi):
+            y, aux = moe_forward(p, xi, m_inner, expert_perm)
+            return y, (aux["lb_loss"], aux["dropped"], aux["expert_load"])
+
+        ys, (lb, drop, load) = jax.lax.map(one, xc)
+        aux = {
+            "lb_loss": lb.mean(),
+            "dropped": drop.sum(),
+            "expert_load": load.sum(axis=0),
+        }
+        return ys.reshape(B, T, d), aux
+    E, K = m.n_experts, m.top_k
+    # decode / small batches: exact no-drop dispatch (C = N·K guarantees a
+    # slot for every routed pair — serving must not drop tokens, and the
+    # capacity heuristic is meaningless at N ≈ B)
+    if N * K <= 4096 and m.capacity_factor >= 1.0:
+        C = N * K
+    else:
+        C = int(np.ceil(m.capacity_factor * N * K / E))
+    xt = x.reshape(N, d)
+
+    logits = jnp.einsum("nd,de->ne", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                    # [N, K]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    if expert_perm is not None:
+        top_e = expert_perm[top_e]
+
+    # capacity slots: for the k-th choice of token n, its slot within expert e
+    # is the running count of earlier (token, choice) pairs routed to e.
+    flat_e = top_e.reshape(-1)                                 # [N*K]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # [N*K, E]
+    slots = ((jnp.cumsum(onehot, axis=0) - onehot) * onehot).sum(axis=-1)
+    keep = slots < C
+    dropped = (~keep).sum()
+
+    buf_pos = jnp.where(keep, flat_e * C + slots, E * C)       # E*C ⇒ dropped
+    tok_idx = jnp.repeat(jnp.arange(N), K)
+    buf = jnp.zeros((E * C, d), x.dtype).at[buf_pos].set(
+        xt[tok_idx], mode="drop"
+    )
+    eb = buf.reshape(E, C, d)
+    if m.ep_axis is not None:
+        # EP: pin the expert buffer and intermediates to the expert axis —
+        # without this GSPMD replicates the scatter-built [E·C, d] buffer and
+        # the [E, C, d_ff] expert activations (measured 16+ GB/dev on
+        # Jamba-398B prefill).
+        from jax.sharding import PartitionSpec as PS
+
+        eb = jax.lax.with_sharding_constraint(eb, PS(m.ep_axis, None, None))
+
+    g = jnp.einsum("ecd,edf->ecf", eb, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", eb, p["w_up"])
+    h = jax.nn.silu(g) * u
+    if m.ep_axis is not None:
+        from jax.sharding import PartitionSpec as PS
+
+        h = jax.lax.with_sharding_constraint(h, PS(m.ep_axis, None, None))
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    if m.ep_axis is not None:
+        from jax.sharding import PartitionSpec as PS
+
+        y = jax.lax.with_sharding_constraint(y, PS(m.ep_axis, None, None))
+    y = y.reshape(E * C, d)
+
+    gathered = y.at[jnp.minimum(buf_pos, E * C - 1)].get(mode="clip")
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    weighted = gathered * top_w.reshape(-1)[:, None].astype(x.dtype)
+    out = jnp.zeros((N, d), x.dtype).at[tok_idx].add(weighted)
+
+    if m.n_shared:
+        sp = p["shared"]
+        out = out + swiglu(xt, sp["gate"], sp["up"], sp["down"])
+
+    # Switch-style load-balance aux loss + stats for the LPT placement.
+    frac_tokens = jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32).mean(0)
+    frac_probs = probs.mean(0)
+    aux = {
+        "lb_loss": E * jnp.sum(frac_tokens * frac_probs),
+        "dropped": dropped,
+        "expert_load": onehot.sum(axis=0),
+    }
+    return out.reshape(B, T, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Paper bridge: sampled-histogram LPT expert placement
+# ---------------------------------------------------------------------------
+
+
+def lpt_expert_permutation(
+    sampled_load: np.ndarray,   # float[E] — expert-load histogram from a sample
+    n_ranks: int,
+) -> np.ndarray:
+    """LPT-pack experts onto EP ranks; return the expert permutation.
+
+    The returned ``perm`` maps logical expert e to physical slot ``perm[e]``
+    such that physical slots are grouped by rank (slot // (E/R) = rank) and
+    per-rank estimated load is ≈ balanced (Graham 4/3 bound, as in Phase 2).
+    """
+    from repro.core.schedule import lpt_schedule
+
+    E = len(sampled_load)
+    assert E % n_ranks == 0, "experts must divide EP ranks"
+    per = E // n_ranks
+    rank_of = lpt_schedule(sampled_load, n_ranks)
+    # LPT can overfill a rank count-wise; rebalance counts while keeping the
+    # heaviest experts where LPT put them.
+    order = np.argsort(-np.asarray(sampled_load), kind="stable")
+    counts = np.zeros(n_ranks, dtype=np.int64)
+    final_rank = np.zeros(E, dtype=np.int64)
+    loads = np.zeros(n_ranks)
+    for e in order:
+        r = rank_of[e]
+        if counts[r] >= per:  # fall back to least-loaded rank with room
+            avail = np.nonzero(counts < per)[0]
+            r = avail[np.argmin(loads[avail])]
+        final_rank[e] = r
+        counts[r] += 1
+        loads[r] += sampled_load[e]
+    # slot assignment within rank: stable order
+    perm = np.zeros(E, dtype=np.int64)
+    next_slot = {r: 0 for r in range(n_ranks)}
+    for e in range(E):
+        r = int(final_rank[e])
+        perm[e] = r * per + next_slot[r]
+        next_slot[r] += 1
+    return perm
+
+
+def apply_expert_permutation(p: Dict[str, jnp.ndarray], perm: np.ndarray):
+    """Re-index stacked expert weights so physical slot layout matches perm."""
+    inv = np.argsort(perm)
+    out = dict(p)
+    for k in ("w_gate", "w_up", "w_down"):
+        out[k] = p[k][jnp.asarray(inv)]
+    return out

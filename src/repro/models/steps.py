@@ -1,0 +1,99 @@
+"""train_step / serve_step builders — the functions the dry-run lowers.
+
+``make_train_step`` supports microbatch gradient accumulation (a ``lax.scan``
+over microbatches — overlapping each microbatch's backward with the next's
+forward is left to XLA; the accumulation keeps activation memory at
+1/accum).  ``make_serve_step`` is one decode step against a pre-sized cache;
+``make_prefill_step`` is the full-sequence forward.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig,
+    accum: int = 1,
+    attn_chunk: Optional[int] = None,
+    batch_spec=None,      # PartitionSpec of one microbatch's leading (B) dim
+    act_spec=None,        # PartitionSpec for [B, T, d] activations
+    accum_dtype=jnp.float32,  # bf16 halves the persistent grad buffer (≥100B)
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``batch`` arrays have leading dim ``global_batch``; with accum > 1 the
+    leading dim is reshaped to [accum, B/accum, ...] and scanned (the reshape
+    gets an explicit sharding constraint so GSPMD keeps B on the data axes).
+    """
+
+    def loss_of(params, mb):
+        return M.loss_fn(cfg, params, mb, chunk=attn_chunk, act_spec=act_spec)
+
+    def train_step(params, opt_state, batch):
+        if accum > 1:
+            from jax.sharding import PartitionSpec as PS
+
+            def resh(a):
+                out = a.reshape((accum, a.shape[0] // accum) + a.shape[1:])
+                if batch_spec is not None:
+                    spec = PS(None, batch_spec, *([None] * (a.ndim - 1)))
+                    out = jax.lax.with_sharding_constraint(out, spec)
+                return out
+
+            mb_batch = jax.tree.map(resh, batch)
+
+            def micro(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: (a.astype(jnp.float32) + b).astype(accum_dtype),
+                    gsum,
+                    g,
+                )
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), mb_batch
+            )
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        params, opt_state, metrics = adamw.update(grads, opt_state, params, opt_cfg)
+        metrics = {"loss": loss, **metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(
+    cfg: ModelConfig, attn_chunk: Optional[int] = None, act_spec=None
+):
+    """Full-sequence forward returning last-position logits (prefill cells)."""
+
+    def prefill(params, batch):
+        logits = M.forward(cfg, params, batch, chunk=attn_chunk, act_spec=act_spec)
+        return logits[:, -1]
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One incremental decode step: (params, cache, tokens[B,1], pos)."""
+
+    def serve_step(params, cache, tokens, pos):
+        return M.decode_step(cfg, params, cache, tokens, pos)
+
+    return serve_step

@@ -1,0 +1,202 @@
+"""MoE dispatch correctness + LPT expert placement; data pipeline; sharding
+rules; HLO collective parser; shard_map parity (subprocess, own devices)."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core.schedule import loads_of
+from repro.data.lm_pipeline import SyntheticLM
+from repro.distributed import hlo as hlo_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import init_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def _moe(E=8, k=2, d=32, f=16, cf=8.0):
+    m = MoEConfig(n_experts=E, top_k=k, expert_d_ff=f, capacity_factor=cf)
+    p = init_params(moe_mod.moe_specs(d, m), KEY, jnp.float32)
+    return m, p
+
+
+def test_moe_matches_dense_oracle():
+    """With ample capacity, dispatch-combine == per-token dense computation."""
+    m, p = _moe()
+    x = jax.random.normal(KEY, (2, 12, 32), jnp.float32)
+    y, aux = moe_mod.moe_forward(p, x, m)
+    assert int(aux["dropped"]) == 0
+
+    # oracle: loop over tokens/experts
+    xt = np.asarray(x).reshape(-1, 32)
+    logits = xt @ np.asarray(p["router"])
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    want = np.zeros_like(xt)
+    for n in range(xt.shape[0]):
+        top = np.argsort(-probs[n])[: m.top_k]
+        w = probs[n][top] / probs[n][top].sum()
+        for e, wi in zip(top, w):
+            g = xt[n] @ np.asarray(p["w_gate"][e])
+            u = xt[n] @ np.asarray(p["w_up"][e])
+            silu = g / (1 + np.exp(-g)) * u
+            want[n] += wi * (silu @ np.asarray(p["w_down"][e]))
+    np.testing.assert_allclose(
+        np.asarray(y).reshape(-1, 32), want, rtol=2e-3, atol=2e-4
+    )
+
+
+def test_moe_capacity_drops_counted():
+    m, p = _moe(cf=0.05)
+    x = jax.random.normal(KEY, (2, 64, 32), jnp.float32)
+    y, aux = moe_mod.moe_forward(p, x, m)
+    assert int(aux["dropped"]) > 0
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_lpt_expert_placement_balances_load():
+    """Paper bridge: skewed sampled loads → LPT placement balances EP ranks
+    far better than the naive modulo striping."""
+    rng = np.random.default_rng(0)
+    E, R = 64, 8
+    load = rng.zipf(1.5, E).astype(float)
+    perm = moe_mod.lpt_expert_permutation(load, R)
+    assert sorted(perm) == list(range(E))
+    rank_load_lpt = loads_of(load, perm // (E // R), R)
+    rank_load_naive = loads_of(load, np.arange(E) % R, R)
+    assert rank_load_lpt.max() <= rank_load_naive.max()
+    # Graham bound relative to the LPT lower bound max(mean, heaviest expert):
+    opt_lb = max(load.sum() / R, load.max())
+    assert rank_load_lpt.max() <= (4.0 / 3.0) * opt_lb + 1e-9
+
+
+def test_expert_permutation_preserves_function():
+    """Permuting expert weights + routing indices is a no-op on outputs."""
+    m, p = _moe()
+    x = jax.random.normal(KEY, (1, 16, 32), jnp.float32)
+    y0, _ = moe_mod.moe_forward(p, x, m)
+    perm = np.asarray(moe_mod.lpt_expert_permutation(np.arange(m.n_experts) + 1.0, 4))
+    p2 = moe_mod.apply_expert_permutation(p, perm)
+    y1, _ = moe_mod.moe_forward(p2, x, m, expert_perm=jnp.asarray(perm))
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_deterministic_and_resumable():
+    p1 = SyntheticLM(vocab=997, seq_len=64, global_batch=8, seed=7)
+    batches = [p1.next_batch() for _ in range(5)]
+    # resume from state 3 → identical batches
+    p2 = SyntheticLM(vocab=997, seq_len=64, global_batch=8, seed=7)
+    p2.load_state_dict({"seed": 7, "step": 3})
+    np.testing.assert_array_equal(p2.next_batch()["tokens"], batches[3]["tokens"])
+    np.testing.assert_array_equal(p2.next_batch()["tokens"], batches[4]["tokens"])
+
+
+def test_pipeline_host_sharding_disjoint():
+    a = SyntheticLM(997, 64, 8, seed=1, n_hosts=2, host_id=0).batch_at(0)
+    b = SyntheticLM(997, 64, 8, seed=1, n_hosts=2, host_id=1).batch_at(0)
+    assert a["tokens"].shape == (4, 64)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules + HLO parser
+# ---------------------------------------------------------------------------
+
+
+def test_spec_for_divisibility_and_conflicts():
+    from jax.sharding import PartitionSpec as PS
+
+    from repro.distributed.sharding import default_rules, spec_for
+
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    # use a fake mesh shape via dict-like: spec_for only reads mesh.shape
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    rules = default_rules(multi_pod=False)
+    # heads=24 not divisible by 16 → dropped; ffn=8192 divisible → model
+    s = spec_for((3072, 24, 128), ("embed", "heads", "head_dim"), FakeMesh(), rules)
+    assert s == PS("data")
+    s = spec_for((3072, 8192), ("embed", "ffn"), FakeMesh(), rules)
+    assert s == PS("data", "model")
+    # conflict: vocab and ffn both want model → second drops
+    s = spec_for((4096, 8192), ("vocab", "ffn"), FakeMesh(), rules)
+    assert s == PS("model")
+
+
+def test_hlo_collective_parser():
+    txt = textwrap.dedent("""\
+      %ag = bf16[16,1024]{1,0} all-gather(bf16[1,1024]{1,0} %p), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+      %ar = f32[128]{0} all-reduce(f32[128]{0} %x), replica_groups=[4,16]<=[64] to_apply=%add
+      %rs = f32[8]{0} reduce-scatter(f32[128]{0} %y), replica_groups={{0,1}}
+      %done = f32[8]{0} all-reduce-done(f32[8]{0} %h)
+    """)
+    colls = hlo_mod.parse_collectives(txt, 64)
+    ops = {c.op: c for c in colls}
+    assert ops["all-gather"].bytes_result == 16 * 1024 * 2
+    assert ops["all-gather"].group_size == 4
+    assert ops["all-reduce"].group_size == 16
+    s = hlo_mod.collective_summary(txt, 64)
+    assert s["count"] == 3  # the -done line is excluded (paired with -start)
+    assert s["total_wire_bytes_per_device"] > 0
+
+
+# ---------------------------------------------------------------------------
+# shard_map parity — separate process with its own device count
+# ---------------------------------------------------------------------------
+
+_PARITY_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax
+from repro.core import fimi, eclat
+from repro.data.ibm_gen import IBMParams, generate_dense
+from repro.launch.mesh import make_miner_mesh
+
+dense = generate_dense(IBMParams(n_tx=256, n_items=16, n_patterns=6,
+                                 avg_pattern_len=4, avg_tx_len=6, seed=11))
+oracle = eclat.brute_force_fis(dense, int(np.ceil(0.1 * 256)))
+shards = fimi.shard_db(dense, 4)
+params = fimi.FimiParams(variant="reservoir", min_support_rel=0.1,
+                         n_db_sample=128, n_fi_sample=64, alpha=0.7,
+                         eclat=eclat.EclatConfig(max_out=2048, max_stack=512))
+mesh = make_miner_mesh(4)
+res = fimi.run(shards, 16, params, jax.random.PRNGKey(2),
+               spmd=fimi.shard_map_spmd, mesh=mesh, materialize=True)
+assert res.fi_dict == oracle, "shard_map result != oracle"
+res_v = fimi.run(shards, 16, params, jax.random.PRNGKey(2), materialize=True)
+assert res_v.fi_dict == oracle, "vmap result != oracle"
+print("SHARD_MAP_PARITY_OK", len(oracle))
+"""
+
+
+def test_shard_map_parity_subprocess():
+    """The same SPMD phase code runs on 4 real devices via shard_map and
+    produces the exact FI set (device-count flag isolated in a subprocess)."""
+    r = subprocess.run(
+        [sys.executable, "-c", _PARITY_SCRIPT],
+        capture_output=True, text=True, timeout=900,
+        env={**__import__("os").environ, "PYTHONPATH": "src"},
+        cwd=str(__import__("pathlib").Path(__file__).resolve().parents[1]),
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SHARD_MAP_PARITY_OK" in r.stdout

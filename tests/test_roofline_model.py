@@ -1,0 +1,97 @@
+"""Validate the analytic roofline cost model against XLA.
+
+1. XLA's ``cost_analysis()`` counts while-loop bodies ONCE (documented
+   behaviour this framework relies on — if it ever changes, the roofline
+   pipeline must be revisited, so we pin it).
+2. The analytic forward-FLOPs model in benchmarks/roofline.py matches XLA's
+   cost analysis of the same forward *unrolled* (no scan, no remat) within
+   10% on a small dense config — the calibration that justifies using the
+   analytic model for the scanned production cells.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import roofline  # noqa: E402
+from repro.configs.base import ModelConfig, ShapeConfig  # noqa: E402
+from repro.models import model as M  # noqa: E402
+
+
+def test_cost_analysis_counts_loop_bodies_once():
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def one(w):
+        return w @ w
+
+    def scanned(w):
+        out, _ = jax.lax.scan(lambda c, _: (c @ w, None), w, None, length=10)
+        return out
+
+    f1 = jax.jit(one).lower(w).compile().cost_analysis()["flops"]
+    f10 = jax.jit(scanned).lower(w).compile().cost_analysis()["flops"]
+    assert f1 == f10  # the pinned behaviour
+
+
+def test_analytic_fwd_flops_matches_unrolled_xla():
+    cfg = ModelConfig(
+        name="calib", family="dense", n_layers=3, d_model=128, n_heads=4,
+        n_kv_heads=2, d_ff=384, vocab=512, remat="none", param_dtype="float32",
+        compute_dtype="float32",
+    )
+    shape = ShapeConfig("calib", seq_len=64, global_batch=4, kind="prefill")
+
+    # unroll: stack of 1-layer scans == analytic sum since bodies count once
+    # per distinct layer when n_layers==1; compile a 1-layer model and scale.
+    cfg1 = ModelConfig(**{**cfg.__dict__, "n_layers": 1})
+    params1 = jax.eval_shape(lambda: M.abstract(cfg1))
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 64), jnp.int32)}
+
+    def fwd1(p, b):
+        return M.forward(cfg1, p, b)
+
+    c1 = jax.jit(fwd1).lower(M.abstract(cfg1), batch).compile()
+    xla1 = c1.cost_analysis()["flops"]
+
+    cfg0 = ModelConfig(**{**cfg.__dict__, "n_layers": 1, "d_ff": 384})
+    # layer cost = flops(1 layer) - flops(embedding+logits); estimate the
+    # overhead from the analytic model's logits term.
+    T = 4 * 64
+    logits_flops = 2.0 * T * cfg.d_model * cfg.vocab_padded
+    layer_xla = xla1 - logits_flops
+
+    analytic_total = roofline.fwd_flops(cfg, shape)
+    analytic_layers = analytic_total - logits_flops
+    analytic_layer = analytic_layers / cfg.n_layers
+
+    rel = abs(layer_xla - analytic_layer) / analytic_layer
+    assert rel < 0.10, (layer_xla, analytic_layer, rel)
+
+
+def test_roofline_table_generates():
+    rows = roofline.full_table("single")
+    assert len(rows) >= 32
+    for c in rows:
+        assert c.compute_s > 0 and c.memory_s > 0
+        assert c.dominant in ("compute", "memory", "collective")
+        assert 0 < c.useful_ratio <= 1.5  # 6ND vs executed (remat ⇒ < 1)
+
+
+def test_model_flops_moe_active():
+    from repro.configs.registry import get_config
+    from repro.configs.base import SHAPES
+
+    dense = get_config("llama3.2-3b")
+    moe = get_config("olmoe-1b-7b")
+    sh = SHAPES["train_4k"]
+    # olmoe: active ≈ 1.3B of 6.9B total → MODEL_FLOPS must reflect active
+    mf = roofline.model_flops(moe, sh)
+    total_params = M.n_params(moe)
+    ratio = mf / (6 * total_params * sh.global_batch * sh.seq_len)
+    assert ratio < 0.45, ratio
