@@ -1,12 +1,25 @@
 """Kernel micro-benchmarks: the Eclat support-counting hot spot.
 
-CPU wall times compare the pure-jnp reference against the MXU-form (unpacked
-dot) — on CPU this measures the *algorithmic* reformulation only; the Pallas
-kernels themselves are validated in interpret mode (tests) and their VMEM
-working sets are reported structurally here.
+CPU wall times compare the pure-jnp reference forms — on CPU this measures the
+*algorithmic* reformulation only; the Pallas kernels themselves are validated
+in interpret mode (tests) and their VMEM working sets are reported
+structurally here.
+
+Sections
+  * single-prefix vs. multi-prefix: K per-prefix ``extension_supports`` calls
+    (the seed miner's inner loop, one launch per DFS node) against ONE fused
+    ``multi_extension_supports`` sweep over the K-node frontier;
+  * pair supports VPU vs. MXU form;
+  * frontier-batched miner: while_loop trips and wall time at K=1 vs K=64 on
+    an IBM-generator database.
+
+Results are printed as CSV lines and written machine-readably to
+``BENCH_kernels.json`` (shapes, reps, µs) so the perf trajectory is
+comparable across PRs.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 from pathlib import Path
@@ -19,41 +32,125 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core import bitmap as bm  # noqa: E402
+from repro.core import eclat  # noqa: E402
+from repro.data.ibm_gen import IBMParams, generate_dense  # noqa: E402
 from repro.kernels import ref  # noqa: E402
 
+REPS = 5
 
-def _time(f, *args, reps=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+
+def _time(f, *args, reps=REPS):
+    jax.block_until_ready(f(*args))  # compile + warm
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(f(*args))
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(fast: bool = False):
+def _time_per_prefix_looped(ext_jit, item_bits, tids, reps=REPS):
+    """The seed miner's cost model: one dispatch per prefix, strictly
+    sequential (each DFS trip depends on the previous one's tidlists), K
+    dispatches to cover a K-node frontier."""
+    K = tids.shape[0]
+    jax.block_until_ready(ext_jit(item_bits, tids[0]))  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for k in range(K):
+            jax.block_until_ready(ext_jit(item_bits, tids[k]))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(fast: bool = False, out_path: str = "BENCH_kernels.json"):
     shapes = [(4096, 128), (16384, 256)] if not fast else [(4096, 128)]
-    rows = []
+    frontier_ks = [8, 64]
+    entries = []
+
     for n_tx, n_items in shapes:
         rng = np.random.default_rng(0)
         dense = rng.random((n_tx, n_items)) < 0.2
         db = bm.BitmapDB.from_dense(jnp.asarray(dense))
         tid = db.all_tids()
+        shape = {"n_tx": n_tx, "n_items": n_items}
 
         ext = jax.jit(ref.extension_supports_ref)
         us_ext = _time(ext, db.item_bits, tid)
+        w = db.item_bits.shape[1]
+        vmem_ext = 256 * min(512, w) * 4 / 1024
+        entries.append(dict(name="extension_supports", **shape, us=us_ext,
+                            vmem_tile_kib=vmem_ext))
+        print(f"kernels.extension_supports[{n_tx}x{n_items}],{us_ext:.1f},"
+              f"vmem_tile_KiB={vmem_ext:.0f}")
+
+        # ---- single-prefix loop vs fused K-prefix batch --------------------
+        for K in frontier_ks:
+            tids = jnp.broadcast_to(tid, (K, tid.shape[0]))
+            us_loop = _time_per_prefix_looped(ext, db.item_bits, tids)
+            batched = jax.jit(ref.multi_extension_supports_ref)
+            us_batch = _time(batched, db.item_bits, tids)
+            entries.append(dict(name="multi_supports_looped", **shape, K=K,
+                                us=us_loop))
+            entries.append(dict(name="multi_supports_batched", **shape, K=K,
+                                us=us_batch, speedup_vs_looped=us_loop / us_batch))
+            print(f"kernels.multi_supports_looped[{n_tx}x{n_items},K={K}],"
+                  f"{us_loop:.1f},")
+            print(f"kernels.multi_supports_batched[{n_tx}x{n_items},K={K}],"
+                  f"{us_batch:.1f},speedup_vs_looped={us_loop/us_batch:.2f}x",
+                  flush=True)
+
+        # ---- all-pairs VPU vs MXU form -------------------------------------
         pair_v = jax.jit(ref.pair_supports_ref)
         us_pv = _time(pair_v, db.item_bits, tid)
         pair_m = jax.jit(ref.pair_supports_mxu_ref)
         us_pm = _time(pair_m, db.item_bits, tid)
-        w = db.item_bits.shape[1]
-        vmem_ext = 256 * min(512, w) * 4 / 1024
-        rows.append((n_tx, n_items, us_ext, us_pv, us_pm))
-        print(f"kernels.extension_supports[{n_tx}x{n_items}],{us_ext:.1f},"
-              f"vmem_tile_KiB={vmem_ext:.0f}")
+        entries.append(dict(name="pair_supports_vpu", **shape, us=us_pv))
+        entries.append(dict(name="pair_supports_mxu", **shape, us=us_pm,
+                            speedup_vs_vpu=us_pv / us_pm))
         print(f"kernels.pair_supports_vpu[{n_tx}x{n_items}],{us_pv:.1f},")
         print(f"kernels.pair_supports_mxu[{n_tx}x{n_items}],{us_pm:.1f},"
               f"speedup_vs_vpu={us_pv/us_pm:.2f}x", flush=True)
-    return rows
+
+    # ---- frontier-batched miner: trips + wall time at K=1 vs 64 ------------
+    p = IBMParams(n_tx=2048 if fast else 8192, n_items=32, n_patterns=10,
+                  avg_pattern_len=6, avg_tx_len=10, seed=5)
+    dense = generate_dense(p)
+    db = bm.BitmapDB.from_dense(jnp.asarray(dense))
+    minsup = int(np.ceil(0.05 * p.n_tx))
+    miner = {}
+    for K in (1, 64):
+        cfg = eclat.EclatConfig(max_out=1 << 14, max_stack=4096, frontier_size=K)
+
+        def mine(_k=K, _cfg=cfg):
+            return eclat.mine_all(db, minsup, config=_cfg)
+
+        res = mine()
+        trips = int(jax.device_get(res.n_iters))
+        n_total = int(jax.device_get(res.n_total))
+        overflow = int(jax.device_get(res.stack_overflow))
+        # an overflowed run mines a truncated tree — its trip count would be
+        # incomparable, so fail loudly instead of recording a bogus speedup
+        assert overflow == 0, f"stack overflow at K={K}: {overflow} drops"
+        us = _time(lambda: jax.block_until_ready(mine().n_iters), reps=3)
+        miner[K] = dict(trips=trips, us=us, n_fis=n_total)
+        entries.append(dict(name="eclat_mine_all", db=p.name,
+                            min_support=minsup, frontier_size=K,
+                            trips=trips, n_fis=n_total,
+                            stack_overflow=overflow, us=us))
+        print(f"kernels.eclat_mine_all[{p.name},K={K}],{us:.1f},"
+              f"trips={trips} n_fis={n_total}", flush=True)
+    print(f"kernels.eclat_trip_reduction[{p.name}],,"
+          f"{miner[1]['trips'] / max(miner[64]['trips'], 1):.1f}x_fewer_trips",
+          flush=True)
+
+    payload = {
+        "bench": "kernels",
+        "backend": jax.default_backend(),
+        "reps": REPS,
+        "fast": fast,
+        "entries": entries,
+    }
+    Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"[wrote {out_path}: {len(entries)} entries]", flush=True)
+    return entries
 
 
 if __name__ == "__main__":

@@ -6,9 +6,11 @@
   kernels      → Eclat support-counting hot spot (B.3.1)
   roofline     → EXPERIMENTS.md §Roofline  (reads results/dryrun/*.json)
 
-``python -m benchmarks.run [--full] [--only NAME]``.  Prints
+``python -m benchmarks.run [--fast|--full] [--only NAME]``.  Prints
 ``name,us_per_call,derived`` CSV lines where applicable.  Defaults to the
-fast variant so the whole suite stays CPU-friendly.
+fast variant so the whole suite stays CPU-friendly.  The kernels section
+additionally writes ``BENCH_kernels.json`` (shapes, reps, µs) so the perf
+trajectory is machine-readable across PRs.
 """
 from __future__ import annotations
 
@@ -19,7 +21,10 @@ import time
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--full", action="store_true")
+    mode.add_argument("--fast", action="store_true",
+                      help="explicit fast mode (the default)")
     ap.add_argument("--only", default="")
     args, _ = ap.parse_known_args()
     fast = not args.full

@@ -191,6 +191,26 @@ def extension_supports(
     return popcount_u32(item_bits & prefix_tid[None, :]).sum(axis=-1)
 
 
+def multi_extension_supports(
+    item_bits: jnp.ndarray, prefix_tids: jnp.ndarray
+) -> jnp.ndarray:
+    """Supports of ``prefix_k ∪ {i}`` for K prefixes at once.
+
+    The frontier-batched Eclat inner loop (DESIGN.md, "Frontier-batched DFS"):
+    one fused AND+popcount sweep over K prefix tidlists instead of K separate
+    ``extension_supports`` launches.
+
+    Args:
+      item_bits: ``uint32[I, W]`` vertical bitmaps.
+      prefix_tids: ``uint32[K, W]`` tidlists of the K frontier prefixes.
+    Returns:
+      ``int32[K, I]`` supports.  Oracle of the Pallas kernels in
+      ``repro.kernels.multi_support``.
+    """
+    inter = prefix_tids[:, None, :] & item_bits[None, :, :]   # [K, I, W]
+    return popcount_u32(inter).sum(axis=-1)
+
+
 def pair_supports(item_bits: jnp.ndarray, valid_tid: jnp.ndarray) -> jnp.ndarray:
     """All-pairs supports ``int32[I, I]``: support({i, j}).
 

@@ -6,8 +6,13 @@ Phase-1 FI enumerator feeding the reservoir sampler.
 
 Adaptation (see DESIGN.md):
   * recursion → ``lax.while_loop`` over a fixed-capacity explicit stack;
-  * per-extension tidlist intersections → one batched AND+popcount sweep per
-    node (``extension_supports``), replaceable by the Pallas kernel;
+  * **frontier batching**: each loop trip pops up to ``frontier_size`` (K)
+    nodes — the top of the stack — and computes all their extension supports
+    in ONE fused ``[K, I]`` AND+popcount sweep (``multi_extension_supports``,
+    replaceable by the Pallas kernels in ``repro.kernels.multi_support``);
+    surviving children of the whole frontier are pushed back with a single
+    vectorized scatter.  K=1 reproduces the classic one-node-per-trip DFS
+    exactly and serves as the parity oracle;
   * dynamic item re-ordering by support (§B.4.2) is kept: each node sorts its
     frequent extensions ascending by support before splitting into child
     PBECs (Prop. 2.23 keeps the classes disjoint for *any* per-node order);
@@ -37,9 +42,10 @@ class EclatConfig:
 
     max_out: int = 4096          # capacity of the FI output buffer
     max_stack: int = 1024        # DFS stack capacity
-    max_iters: int = 1 << 20     # hard bound on loop trips (≥ |F|+1)
+    max_iters: int = 1 << 20     # hard bound on loop trips (≥ |F|+1 at K=1)
     reservoir_size: int = 0      # >0 enables the in-loop reservoir sampler
     count_only: bool = False     # skip writing the FI buffer (Phase-1 f_i count)
+    frontier_size: int = 1       # K — DFS nodes mined per while_loop trip
 
 
 class EclatResult(NamedTuple):
@@ -72,7 +78,19 @@ class _State(NamedTuple):
     it: jnp.ndarray
 
 
+#: single-prefix support plug-in: (item_bits[I, W], tid[W]) -> int32[I]
 SupportFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+#: multi-prefix support plug-in: (item_bits[I, W], tids[K, W]) -> int32[K, I]
+MultiSupportFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def _lift_support_fn(support_fn: SupportFn) -> MultiSupportFn:
+    """vmap a single-prefix support fn over the frontier axis."""
+
+    def multi(item_bits, prefix_tids):
+        return jax.vmap(lambda t: support_fn(item_bits, t))(prefix_tids)
+
+    return multi
 
 
 def _reservoir_update(state, itemsets_packed, supports, emit_mask, R):
@@ -100,7 +118,7 @@ def _reservoir_update(state, itemsets_packed, supports, emit_mask, R):
 
 @partial(
     jax.jit,
-    static_argnames=("config", "n_items", "support_fn"),
+    static_argnames=("config", "n_items", "support_fn", "multi_support_fn"),
 )
 def mine_seeded(
     item_bits: jnp.ndarray,
@@ -114,6 +132,7 @@ def mine_seeded(
     config: EclatConfig,
     n_items: int,
     support_fn: Optional[SupportFn] = None,
+    multi_support_fn: Optional[MultiSupportFn] = None,
 ) -> EclatResult:
     """Mine all FIs in the union of K PBECs ``[prefix_k | ext_k]``.
 
@@ -122,15 +141,25 @@ def mine_seeded(
     "caller passes T(U_k)" (computed in one batched AND-reduce).  The prefixes
     U_k themselves are *not* emitted (Phase 4 handles prefix supports via the
     side channel, Alg. 19 line 2).
+
+    Each loop trip mines a **frontier** of up to ``config.frontier_size``
+    nodes: one fused multi-prefix support sweep, one vectorized child scatter.
+    ``multi_support_fn`` (if given) computes the fused ``[F, I]`` supports;
+    otherwise a provided single-prefix ``support_fn`` is vmapped over the
+    frontier, falling back to the pure-jnp oracle.
     """
-    if support_fn is None:
-        support_fn = bm.extension_supports
+    if multi_support_fn is None:
+        if support_fn is not None:
+            multi_support_fn = _lift_support_fn(support_fn)
+        else:
+            multi_support_fn = bm.multi_extension_supports
     I = n_items
     IW = bm.n_words(I)
     W = item_bits.shape[-1]
     S, O, R = config.max_stack, config.max_out, max(config.reservoir_size, 1)
     K = seed_prefix.shape[0]
     assert K <= S, "seed count exceeds stack capacity"
+    F = max(1, min(config.frontier_size, S))   # frontier width per trip
 
     # Compact valid seeds to the bottom of the stack.
     seed_valid = seed_valid.astype(jnp.bool_)
@@ -159,46 +188,59 @@ def mine_seeded(
         it=jnp.asarray(0, jnp.int32),
     )
 
+    # Constant across iterations: packed one-hot masks of every item
+    # (hoisted out of the loop body — built fresh every trip in the seed).
+    e_packed = bm.pack_bool(jax.nn.one_hot(jnp.arange(I), I, dtype=jnp.bool_))
+
     def cond(s: _State):
         return (s.sp > 0) & (s.it < config.max_iters)
 
     def body(s: _State) -> _State:
-        sp = s.sp - 1
-        node_items = s.stk_items[sp]          # uint32[IW]
-        node_ext = s.stk_ext[sp]              # uint32[IW]
-        node_tid = s.stk_tid[sp]              # uint32[W]
-        ext_bool = bm.unpack_bool(node_ext, I)
+        # --- pop a frontier: the top min(sp, F) stack nodes -----------------
+        idx = s.sp - 1 - jnp.arange(F)        # [F] — top of stack first
+        active = idx >= 0                      # [F]
+        idx_c = jnp.maximum(idx, 0)
+        node_items = s.stk_items[idx_c]        # uint32[F, IW]
+        node_ext = s.stk_ext[idx_c]            # uint32[F, IW]
+        node_tid = s.stk_tid[idx_c]            # uint32[F, W]
+        # Inactive lanes alias stack slot 0; masking their extension sets to ∅
+        # makes them emit and push nothing.
+        ext_bool = bm.unpack_bool(node_ext, I) & active[:, None]   # [F, I]
 
-        # --- batched support counting (the Pallas-accelerated hot spot) -----
-        supports = support_fn(item_bits, node_tid)          # int32[I]
+        # --- fused multi-prefix support counting (the Pallas hot spot) ------
+        supports = multi_support_fn(item_bits, node_tid)     # int32[F, I]
         freq = ext_bool & (supports >= min_support)
-        nf = freq.sum().astype(jnp.int32)
+        nf = freq.sum(axis=-1).astype(jnp.int32)             # [F]
+        nf_total = nf.sum()
 
         # --- dynamic re-ordering: rank frequent extensions by support ------
         sort_key = jnp.where(freq, supports, jnp.iinfo(jnp.int32).max)
-        order = jnp.argsort(sort_key)                        # frequent first, asc
-        rank = jnp.argsort(order)                            # rank per item
-        # rank < nf  ⇔  item is a frequent extension.
+        order = jnp.argsort(sort_key, axis=-1)               # frequent first, asc
+        rank = jnp.argsort(order, axis=-1)                   # rank per item
+        # rank[f] < nf[f]  ⇔  item is a frequent extension of node f.
 
-        # --- emit FIs: prefix ∪ {e} for each frequent e ---------------------
-        e_packed = bm.pack_bool(jax.nn.one_hot(jnp.arange(I), I, dtype=jnp.bool_))
-        child_items = node_items[None, :] | e_packed         # [I, IW]
-        out_pos = jnp.where(freq, s.n_out + rank, O)         # O ⇒ dropped
+        # --- emit FIs: prefix_f ∪ {e} for each frequent e -------------------
+        child_items = node_items[:, None, :] | e_packed[None, :, :]  # [F, I, IW]
+        node_off = s.n_out + jnp.cumsum(nf) - nf             # exclusive prefix sum
+        out_pos = jnp.where(freq, node_off[:, None] + rank, O)   # ≥O ⇒ dropped
+        flat_pos = out_pos.reshape(F * I)
+        flat_items = child_items.reshape(F * I, IW)
+        flat_supp = supports.reshape(F * I)
         if not config.count_only:
-            out_items = s.out_items.at[out_pos].set(child_items, mode="drop")
-            out_supp = s.out_supp.at[out_pos].set(supports, mode="drop")
+            out_items = s.out_items.at[flat_pos].set(flat_items, mode="drop")
+            out_supp = s.out_supp.at[flat_pos].set(flat_supp, mode="drop")
         else:
             out_items, out_supp = s.out_items, s.out_supp
-        n_out = jnp.minimum(s.n_out + nf, O)
-        n_total = s.n_total + nf
+        n_out = jnp.minimum(s.n_out + nf_total, O)
+        n_total = s.n_total + nf_total
 
         # --- reservoir over the emitted stream ------------------------------
         if config.reservoir_size > 0:
             res_items, res_supp, res_seen, key = _reservoir_update(
                 (s.res_items, s.res_supp, s.res_seen, s.key),
-                child_items,
-                supports,
-                freq,
+                flat_items,
+                flat_supp,
+                freq.reshape(F * I),
                 config.reservoir_size,
             )
         else:
@@ -209,26 +251,30 @@ def mine_seeded(
                 s.key,
             )
 
-        # --- push child PBECs ------------------------------------------------
+        # --- push child PBECs (one scatter for the whole frontier) ----------
         # Child of extension e keeps extensions with larger rank (Prop. 2.23).
-        later = rank[None, :] > rank[:, None]                # [I(child e), I(f)]
-        child_ext_bool = later & freq[None, :]
-        child_ext = bm.pack_bool(child_ext_bool)             # [I, IW]
-        child_tid = item_bits & node_tid[None, :]            # [I, W]
-        # Push only children that themselves have ≥1 extension *or* not — every
-        # frequent child is pushed; leaves pop with zero frequent extensions and
-        # cost one cheap iteration.  (Skipping empty-ext leaves halves the trip
-        # count; do it: children with no extensions need no node of their own.)
+        later = rank[:, None, :] > rank[:, :, None]          # [F, I(child e), I]
+        child_ext_bool = later & freq[:, None, :]
+        child_ext = bm.pack_bool(child_ext_bool)             # [F, I, IW]
+        child_tid = item_bits[None, :, :] & node_tid[:, None, :]   # [F, I, W]
+        # Children with no extensions are leaves: their FI was already emitted
+        # above, so pushing them would only burn a trip — skip them.
         has_ext = child_ext_bool.any(axis=-1)
-        push = freq & has_ext
-        n_push = push.sum().astype(jnp.int32)
-        push_rank = jnp.cumsum(push) - 1                     # 0..n_push-1
-        stack_pos = jnp.where(push, sp + push_rank, S)       # S ⇒ dropped
-        dropped = jnp.maximum(sp + n_push - S, 0)
-        stk_items = s.stk_items.at[stack_pos].set(child_items, mode="drop")
-        stk_ext = s.stk_ext.at[stack_pos].set(child_ext, mode="drop")
-        stk_tid = s.stk_tid.at[stack_pos].set(child_tid, mode="drop")
-        sp_new = jnp.minimum(sp + n_push, S)
+        push = freq & has_ext                                # [F, I]
+        push_flat = push.reshape(F * I)
+        n_push = push_flat.sum().astype(jnp.int32)
+        sp_pop = s.sp - active.sum().astype(jnp.int32)
+        push_rank = jnp.cumsum(push_flat) - 1                # 0..n_push-1
+        stack_pos = jnp.where(push_flat, sp_pop + push_rank, S)  # ≥S ⇒ dropped
+        dropped = jnp.maximum(sp_pop + n_push - S, 0)
+        stk_items = s.stk_items.at[stack_pos].set(flat_items, mode="drop")
+        stk_ext = s.stk_ext.at[stack_pos].set(
+            child_ext.reshape(F * I, IW), mode="drop"
+        )
+        stk_tid = s.stk_tid.at[stack_pos].set(
+            child_tid.reshape(F * I, W), mode="drop"
+        )
+        sp_new = jnp.minimum(sp_pop + n_push, S)
 
         return _State(
             sp=sp_new,
@@ -271,6 +317,7 @@ def mine(
     config: EclatConfig,
     n_items: int,
     support_fn: Optional[SupportFn] = None,
+    multi_support_fn: Optional[MultiSupportFn] = None,
 ) -> EclatResult:
     """Single-PBEC convenience wrapper over :func:`mine_seeded`."""
     return mine_seeded(
@@ -284,6 +331,7 @@ def mine(
         config=config,
         n_items=n_items,
         support_fn=support_fn,
+        multi_support_fn=multi_support_fn,
     )
 
 
@@ -294,6 +342,7 @@ def mine_all(
     *,
     config: EclatConfig = EclatConfig(),
     support_fn: Optional[SupportFn] = None,
+    multi_support_fn: Optional[MultiSupportFn] = None,
 ) -> EclatResult:
     """Mine *all* FIs of a database (root PBEC [∅ | B])."""
     if key is None:
@@ -309,6 +358,7 @@ def mine_all(
         config=config,
         n_items=I,
         support_fn=support_fn,
+        multi_support_fn=multi_support_fn,
     )
 
 

@@ -46,7 +46,8 @@ class FimiParams:
     max_classes: int = 512
     eclat: eclat.EclatConfig = eclat.EclatConfig(max_out=8192, max_stack=2048)
     mfi: mfi.MFIConfig = mfi.MFIConfig(max_out=2048, max_stack=2048)
-    support_fn: Optional[Callable] = None   # Phase-4 kernel plug-in
+    support_fn: Optional[Callable] = None   # Phase-4 single-prefix kernel plug-in
+    multi_support_fn: Optional[Callable] = None  # Phase-4 fused [K,I] kernel plug-in
 
 
 @dataclasses.dataclass
@@ -91,12 +92,22 @@ def shard_map_spmd(fn, P: int, mesh):
         out = fn(*args)
         return jax.tree.map(lambda a: jnp.asarray(a)[None], out)
 
-    return jax.shard_map(
+    if hasattr(jax, "shard_map"):  # newer JAX: top-level API, check_vma kwarg
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=PS(AXIS),
+            out_specs=PS(AXIS),
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
         body,
         mesh=mesh,
         in_specs=PS(AXIS),
         out_specs=PS(AXIS),
-        check_vma=False,
+        check_rep=False,
     )
 
 
@@ -282,6 +293,7 @@ def run(
         n_items=n_items,
         eclat_cfg=params.eclat,
         support_fn=params.support_fn,
+        multi_support_fn=params.multi_support_fn,
     )
     keys4 = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(P))
     out4 = spmd(p4, P, mesh)(

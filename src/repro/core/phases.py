@@ -38,6 +38,19 @@ _U32 = jnp.uint32
 # ---------------------------------------------------------------------------
 
 
+def axis_size(axis_name) -> int:
+    """Static size of a named axis — ``jax.lax.axis_size`` compat shim.
+
+    ``jax.lax.axis_size`` only exists on newer JAX; on older versions
+    ``psum`` of an unmapped Python constant folds to ``1 * P`` at trace time
+    under both ``vmap`` and ``shard_map``, so the result stays a Python int
+    and remains usable for static shapes.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
 def vertical_from_slab(
     slab: jnp.ndarray, valid: jnp.ndarray, n_items: int
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -134,7 +147,7 @@ def phase1_device(
        through a local reservoir (reservoir variant) or collecting MFI
        candidates M_i (par variant).
     """
-    P = jax.lax.axis_size(axis_name)
+    P = axis_size(axis_name)
     k_samp, k_res = jax.random.split(jax.random.fold_in(key, jax.lax.axis_index(axis_name)))
 
     rows = bm.sample_transactions(local_tx, k_samp, n_sample_per_proc, n_tx_local)
@@ -262,7 +275,7 @@ def phase3_exchange(
     tournament of Alg. 18 — see DESIGN.md).  Overflow is *counted*, never
     silently dropped.
     """
-    P = jax.lax.axis_size(axis_name)
+    P = axis_size(axis_name)
     T = local_tx.shape[0]
 
     # contains[t, k]: U_k ⊆ t
@@ -342,11 +355,13 @@ def phase4_mine(
     n_items: int,
     eclat_cfg: eclat.EclatConfig,
     support_fn=None,
+    multi_support_fn=None,
 ) -> Phase4Out:
     """Alg. 19 (Phase-4-Compute-FI) with Eclat (Alg. 22):
 
     * line 2–5: local supports of ancestor prefixes on D_q, ``psum`` → global;
-    * line 6: Exec-Eclat over the assigned PBECs on the received slab D'_q.
+    * line 6: Exec-Eclat over the assigned PBECs on the received slab D'_q,
+      mining ``eclat_cfg.frontier_size`` nodes per loop trip.
     """
     from repro.core.apriori import count_supports
 
@@ -371,6 +386,7 @@ def phase4_mine(
         config=eclat_cfg,
         n_items=n_items,
         support_fn=support_fn,
+        multi_support_fn=multi_support_fn,
     )
     return Phase4Out(
         fi_items=res.items,

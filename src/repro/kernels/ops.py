@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import bitmap_support as _bs
+from repro.kernels import multi_support as _ms
 from repro.kernels import pair_support as _ps
 from repro.kernels import ref as _ref
 
@@ -37,6 +38,32 @@ def extension_supports(
     if mode == "interpret":
         return _bs.extension_supports_pallas(item_bits, prefix_tid, interpret=True)
     return _ref.extension_supports_ref(item_bits, prefix_tid)
+
+
+def multi_extension_supports(
+    item_bits: jnp.ndarray,
+    prefix_tids: jnp.ndarray,
+    *,
+    use_mxu: bool = False,
+    force: str | None = None,
+) -> jnp.ndarray:
+    """Supports of prefix_k ∪ {i} for K prefixes: int32[K, I].
+
+    The frontier-batched Eclat plug-in (``multi_support_fn``).  ``use_mxu``
+    picks the unpack+dot kernel (wins once K fills MXU rows); force ∈
+    {None, 'pallas', 'ref', 'interpret'} selects the implementation.
+    """
+    mode = force or ("pallas" if _on_tpu() else "ref")
+    if mode in ("pallas", "interpret"):
+        f = (
+            _ms.multi_extension_supports_mxu_pallas
+            if use_mxu
+            else _ms.multi_extension_supports_pallas
+        )
+        return f(item_bits, prefix_tids, interpret=(mode == "interpret"))
+    if use_mxu:
+        return _ref.multi_extension_supports_mxu_ref(item_bits, prefix_tids)
+    return _ref.multi_extension_supports_ref(item_bits, prefix_tids)
 
 
 def pair_supports(

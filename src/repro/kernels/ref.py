@@ -15,6 +15,13 @@ def extension_supports_ref(item_bits: jnp.ndarray, prefix_tid: jnp.ndarray) -> j
     return bm.extension_supports(item_bits, prefix_tid)
 
 
+def multi_extension_supports_ref(
+    item_bits: jnp.ndarray, prefix_tids: jnp.ndarray
+) -> jnp.ndarray:
+    """int32[K, I] = popcount(item_bits[i] & prefix_tids[k]) summed over words."""
+    return bm.multi_extension_supports(item_bits, prefix_tids)
+
+
 def pair_supports_ref(item_bits: jnp.ndarray, valid_tid: jnp.ndarray) -> jnp.ndarray:
     """int32[I, I] all-pairs supports via VPU-style popcount(AND)."""
     return bm.pair_supports(item_bits, valid_tid)
@@ -32,3 +39,13 @@ def pair_supports_mxu_ref(item_bits: jnp.ndarray, valid_tid: jnp.ndarray) -> jnp
     supports < 2^24).  Oracle of the fused unpack+dot Pallas kernel."""
     masked = unpack_bits_f32(item_bits & valid_tid[None, :])
     return jnp.dot(masked, masked.T).astype(jnp.int32)
+
+
+def multi_extension_supports_mxu_ref(
+    item_bits: jnp.ndarray, prefix_tids: jnp.ndarray
+) -> jnp.ndarray:
+    """Multi-prefix supports as a matmul over unpacked bits — oracle of the
+    fused unpack+dot multi-prefix Pallas kernel."""
+    t = unpack_bits_f32(prefix_tids)
+    a = unpack_bits_f32(item_bits)
+    return jnp.dot(t, a.T).astype(jnp.int32)

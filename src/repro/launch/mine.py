@@ -48,6 +48,8 @@ def main():
     ap.add_argument("--scheduler", default="lpt", choices=["lpt", "repl_min"])
     ap.add_argument("--alpha", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--frontier", type=int, default=16,
+                    help="DFS nodes mined per while_loop trip (K)")
     args = ap.parse_args()
 
     dense = generate_dense(params_from_name(args.db, seed=args.seed))
@@ -57,14 +59,16 @@ def main():
         variant=args.variant, min_support_rel=args.support,
         alpha=args.alpha, scheduler=args.scheduler,
         n_db_sample=min(2048, dense.shape[0]), n_fi_sample=1024,
-        eclat=eclat.EclatConfig(max_out=1 << 15, max_stack=8192),
+        eclat=eclat.EclatConfig(
+            max_out=1 << 15, max_stack=8192, frontier_size=args.frontier
+        ),
     )
     use_shard_map = len(jax.devices()) >= args.P
     spmd = fimi.shard_map_spmd if use_shard_map else fimi.vmap_spmd
     mesh = make_miner_mesh(args.P) if use_shard_map else None
     print(
         f"db={args.db} |D|={dense.shape[0]} |B|={n_items} sup={args.support} "
-        f"variant={args.variant} P={args.P} "
+        f"variant={args.variant} P={args.P} frontier={args.frontier} "
         f"backend={'shard_map' if use_shard_map else 'vmap'}"
     )
     t0 = time.time()

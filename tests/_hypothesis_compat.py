@@ -1,0 +1,32 @@
+"""Optional-hypothesis shim (see requirements-dev.txt).
+
+``hypothesis`` is a dev-only dependency; importing it at test-module top level
+would make collection hard-error without it, and ``pytest.importorskip`` would
+skip whole modules — including their many non-property tests.  Importing
+``given``/``settings``/``st`` from here instead skips exactly the ``@given``
+tests when hypothesis is absent and is transparent when it is installed.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``strategies``: any attribute is a no-op factory."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(
+            reason="hypothesis not installed (pip install -r requirements-dev.txt)"
+        )
+
+    def settings(*_a, **_k):
+        return lambda f: f

@@ -1,7 +1,8 @@
 """Unit + property tests for the packed-bitmap substrate."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st  # skips @given tests w/o hypothesis
 
 import jax.numpy as jnp
 

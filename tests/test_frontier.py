@@ -1,0 +1,138 @@
+"""Frontier-batched Eclat: parity with the K=1 oracle path and brute force,
+trip-count reduction, and interaction with reservoir / count_only / seeds."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm, eclat
+
+
+def _to_dict(res, n_items):
+    out = {}
+    for k in range(int(res.n_out)):
+        mask = np.asarray(bm.unpack_bool(res.items[k], n_items))
+        out[frozenset(np.nonzero(mask)[0].tolist())] = int(res.supports[k])
+    return out
+
+
+@pytest.mark.parametrize("frontier", [1, 8, 64])
+def test_frontier_mine_all_matches_bruteforce(small_db, frontier):
+    """End-to-end: identical FIs + supports vs brute force at every K."""
+    dense, db, minsup, oracle = small_db
+    res = eclat.mine_all(
+        db, minsup,
+        config=eclat.EclatConfig(
+            max_out=8192, max_stack=2048, frontier_size=frontier
+        ),
+    )
+    assert int(res.stack_overflow) == 0
+    assert int(res.n_total) == len(oracle)
+    assert _to_dict(res, db.n_items) == oracle
+
+
+def test_frontier_trip_reduction_ibm_db(small_db):
+    """frontier_size=64 must execute ≥5× fewer while_loop trips than the
+    single-node miner on the IBM-generator database (the perf contract)."""
+    dense, db, minsup, oracle = small_db
+    trips = {}
+    for k in (1, 64):
+        res = eclat.mine_all(
+            db, minsup,
+            config=eclat.EclatConfig(
+                max_out=8192, max_stack=2048, frontier_size=k
+            ),
+        )
+        assert _to_dict(res, db.n_items) == oracle
+        trips[k] = int(res.n_iters)
+    assert trips[64] * 5 <= trips[1], trips
+
+
+@pytest.mark.parametrize("frontier", [4, 32])
+def test_frontier_seeded_matches_k1(small_db, frontier):
+    """mine_seeded over several PBEC seeds: frontier path == K=1 oracle path."""
+    dense, db, minsup, oracle = small_db
+    I = db.n_items
+    # three 1-prefix seeds with suffix extension sets (valid PBECs)
+    seed_items = [1, 5, 9]
+    prefix = np.zeros((3, I), bool)
+    ext = np.zeros((3, I), bool)
+    for j, it in enumerate(seed_items):
+        prefix[j, it] = True
+        ext[j, it + 1:] = True
+    tids = jnp.stack([
+        bm.tidlist_of_itemset(db, jnp.asarray(prefix[j])) for j in range(3)
+    ])
+    results = {}
+    for k in (1, frontier):
+        res = eclat.mine_seeded(
+            db.item_bits,
+            jnp.asarray(prefix),
+            jnp.asarray(ext),
+            tids,
+            jnp.ones((3,), jnp.bool_),
+            jnp.asarray(minsup, jnp.int32),
+            jax.random.PRNGKey(0),
+            config=eclat.EclatConfig(
+                max_out=8192, max_stack=2048, frontier_size=k
+            ),
+            n_items=I,
+        )
+        assert int(res.stack_overflow) == 0
+        results[k] = _to_dict(res, I)
+    assert results[frontier] == results[1]
+    want = {
+        fs: s for fs, s in oracle.items()
+        if len(fs) > 1 and min(fs) in seed_items
+    }
+    assert results[1] == want
+
+
+def test_frontier_count_only_and_total(small_db):
+    dense, db, minsup, oracle = small_db
+    res = eclat.mine_all(
+        db, minsup,
+        config=eclat.EclatConfig(
+            max_out=8192, max_stack=2048, frontier_size=16, count_only=True
+        ),
+    )
+    assert int(res.n_total) == len(oracle)
+    # count_only leaves the output buffer untouched
+    assert not np.asarray(res.items).any()
+
+
+def test_frontier_reservoir_stream(small_db):
+    """The in-loop reservoir sees the same stream length under batching and
+    every reservoir element is a real FI with its true support."""
+    dense, db, minsup, oracle = small_db
+    R = 32
+    res = eclat.mine_all(
+        db, minsup,
+        config=eclat.EclatConfig(
+            max_out=8192, max_stack=2048, frontier_size=8,
+            reservoir_size=R, count_only=True,
+        ),
+        key=jax.random.PRNGKey(7),
+    )
+    assert int(res.n_total) == len(oracle)
+    n_res = min(R, len(oracle))
+    for k in range(n_res):
+        mask = np.asarray(bm.unpack_bool(res.reservoir_items[k], db.n_items))
+        fs = frozenset(np.nonzero(mask)[0].tolist())
+        assert fs in oracle
+        assert oracle[fs] == int(res.reservoir_supports[k])
+
+
+def test_frontier_wider_than_stack_clamps():
+    """frontier_size > max_stack must clamp, not crash."""
+    rng = np.random.default_rng(3)
+    dense = rng.random((64, 10)) < 0.4
+    db = bm.BitmapDB.from_dense(jnp.asarray(dense))
+    oracle = eclat.brute_force_fis(dense, 8)
+    res = eclat.mine_all(
+        db, 8,
+        config=eclat.EclatConfig(max_out=4096, max_stack=32, frontier_size=128),
+    )
+    assert int(res.stack_overflow) == 0
+    assert _to_dict(res, 10) == oracle

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 
 from repro.core import bitmap as bm
 from repro.kernels import bitmap_support as bs
+from repro.kernels import multi_support as ms
 from repro.kernels import pair_support as ps
 from repro.kernels import ops, ref
 
@@ -59,6 +60,97 @@ def test_extension_supports_with_prefix_tid():
     want = np.asarray(ref.extension_supports_ref(db.item_bits, tid))
     got = np.asarray(bs.extension_supports_pallas(db.item_bits, tid, interpret=True))
     np.testing.assert_array_equal(got, want)
+
+
+# ragged (n_tx, n_items, K) sweeps: sub-tile, word-aligned, prime, multi-tile
+MULTI_SHAPES = [
+    (33, 7, 1),       # sub-tile everything, K=1 degenerate frontier
+    (128, 16, 3),     # word-aligned tx, tiny ragged K
+    (257, 64, 8),     # prime tx count
+    (300, 40, 13),    # ragged everything
+    (1024, 130, 5),   # multi-tile items
+    (512, 24, 64),    # wide frontier
+]
+
+
+def _random_tids(db, k, seed):
+    """K prefix tidlists: tidlists of random small itemsets (incl. ∅)."""
+    rng = np.random.default_rng(seed)
+    tids = []
+    for j in range(k):
+        mask = np.zeros(db.n_items, bool)
+        n_members = int(rng.integers(0, 3))
+        mask[rng.choice(db.n_items, size=n_members, replace=False)] = True
+        tids.append(np.asarray(bm.tidlist_of_itemset(db, jnp.asarray(mask))))
+    return jnp.asarray(np.stack(tids))
+
+
+@pytest.mark.parametrize("n_tx,n_items,k", MULTI_SHAPES)
+def test_multi_extension_supports_vpu_sweep(n_tx, n_items, k):
+    db = _random_db(n_tx, n_items, seed=n_tx + n_items + k)
+    tids = _random_tids(db, k, seed=k)
+    want = np.asarray(ref.multi_extension_supports_ref(db.item_bits, tids))
+    got = np.asarray(
+        ms.multi_extension_supports_pallas(db.item_bits, tids, interpret=True)
+    )
+    np.testing.assert_array_equal(got, want)
+    # row k of the fused sweep == the single-prefix kernel on tid_k
+    for j in range(min(k, 3)):
+        row = np.asarray(
+            bs.extension_supports_pallas(db.item_bits, tids[j], interpret=True)
+        )
+        np.testing.assert_array_equal(want[j], row)
+
+
+@pytest.mark.parametrize("n_tx,n_items,k", MULTI_SHAPES)
+def test_multi_extension_supports_mxu_sweep(n_tx, n_items, k):
+    """The unpack+MXU-dot multi-prefix form is exact (counts < 2^24)."""
+    db = _random_db(n_tx, n_items, seed=n_tx + k)
+    tids = _random_tids(db, k, seed=k + 1)
+    want = np.asarray(ref.multi_extension_supports_ref(db.item_bits, tids))
+    got = np.asarray(
+        ms.multi_extension_supports_mxu_pallas(
+            db.item_bits, tids, block_k=8, block_i=16, block_w=8, interpret=True
+        )
+    )
+    np.testing.assert_array_equal(got, want)
+    # jnp MXU reference agrees too
+    got_ref = np.asarray(
+        ref.multi_extension_supports_mxu_ref(db.item_bits, tids)
+    )
+    np.testing.assert_array_equal(got_ref, want)
+
+
+@pytest.mark.parametrize("block_k,block_i,block_w", [(8, 8, 128), (8, 64, 256)])
+def test_multi_extension_supports_block_shapes(block_k, block_i, block_w):
+    db = _random_db(777, 53, seed=11)
+    tids = _random_tids(db, 10, seed=12)
+    want = np.asarray(ref.multi_extension_supports_ref(db.item_bits, tids))
+    got = np.asarray(
+        ms.multi_extension_supports_pallas(
+            db.item_bits, tids,
+            block_k=block_k, block_i=block_i, block_w=block_w, interpret=True,
+        )
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_multi_ops_dispatch_cpu():
+    db = _random_db(256, 20, seed=5)
+    tids = _random_tids(db, 6, seed=6)
+    a = np.asarray(ops.multi_extension_supports(db.item_bits, tids))
+    b = np.asarray(
+        ops.multi_extension_supports(db.item_bits, tids, force="interpret")
+    )
+    np.testing.assert_array_equal(a, b)
+    c = np.asarray(ops.multi_extension_supports(db.item_bits, tids, use_mxu=True))
+    np.testing.assert_array_equal(a, c)
+    d = np.asarray(
+        ops.multi_extension_supports(
+            db.item_bits, tids, use_mxu=True, force="interpret"
+        )
+    )
+    np.testing.assert_array_equal(a, d)
 
 
 @pytest.mark.parametrize("n_tx,n_items", [(64, 9), (300, 40), (1024, 70)])
@@ -115,4 +207,22 @@ def test_kernel_plugs_into_eclat(small_db):
         config=eclat.EclatConfig(max_out=8192, max_stack=2048),
         support_fn=support_fn,
     )
+    assert int(res.n_total) == len(oracle)
+
+
+def test_multi_kernel_plugs_into_frontier_eclat(small_db):
+    """Frontier-batched Eclat driven by the fused multi-prefix Pallas kernel
+    (interpret mode) == oracle."""
+    dense, db, minsup, oracle = small_db
+    from repro.core import eclat
+
+    def multi_support_fn(item_bits, tids):
+        return ms.multi_extension_supports_pallas(item_bits, tids, interpret=True)
+
+    res = eclat.mine_all(
+        db, minsup,
+        config=eclat.EclatConfig(max_out=8192, max_stack=2048, frontier_size=8),
+        multi_support_fn=multi_support_fn,
+    )
+    assert int(res.stack_overflow) == 0
     assert int(res.n_total) == len(oracle)

@@ -1,7 +1,8 @@
 """Sampling theory (Ch. 6), PBEC partitioning (Ch. 8.2), schedulers."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st  # skips @given tests w/o hypothesis
 
 import jax
 import jax.numpy as jnp
