@@ -4,13 +4,16 @@
   pbec         → §11.3 Figs 11.1–11.12     (double-sampling estimation error)
   replication  → §11.5 Tables 11.15–11.21  (LPT vs DB-Repl-Min)
   kernels      → Eclat support-counting hot spot (B.3.1)
+  serve        → batched subset-query serving sweep (DESIGN.md §Serving)
   roofline     → EXPERIMENTS.md §Roofline  (reads results/dryrun/*.json)
 
-``python -m benchmarks.run [--fast|--full] [--only NAME]``.  Prints
+``python -m benchmarks.run [--fast|--full|--smoke] [--only NAME]``.  Prints
 ``name,us_per_call,derived`` CSV lines where applicable.  Defaults to the
-fast variant so the whole suite stays CPU-friendly.  The kernels section
-additionally writes ``BENCH_kernels.json`` (shapes, reps, µs) so the perf
-trajectory is machine-readable across PRs.
+fast variant so the whole suite stays CPU-friendly; ``--smoke`` runs only
+the kernels + serve sections in fast mode (the CI gate, tools/check.sh).
+The kernels and serve sections additionally write ``BENCH_kernels.json`` /
+``BENCH_serve.json`` (shapes, reps, µs) so the perf trajectory is
+machine-readable across PRs.
 """
 from __future__ import annotations
 
@@ -25,11 +28,16 @@ def main() -> None:
     mode.add_argument("--full", action="store_true")
     mode.add_argument("--fast", action="store_true",
                       help="explicit fast mode (the default)")
+    mode.add_argument("--smoke", action="store_true",
+                      help="CI gate: kernels + serve sections, fast mode")
     ap.add_argument("--only", default="")
     args, _ = ap.parse_known_args()
     fast = not args.full
 
-    sections = ["kernels", "speedup", "pbec", "replication", "roofline"]
+    sections = ["kernels", "serve", "speedup", "pbec", "replication",
+                "roofline"]
+    if args.smoke:
+        sections = ["kernels", "serve"]
     if args.only:
         sections = [args.only]
 
@@ -40,6 +48,10 @@ def main() -> None:
             from benchmarks import kernels
 
             kernels.run(fast=fast)
+        elif name == "serve":
+            from benchmarks import serve
+
+            serve.run(fast=fast)
         elif name == "speedup":
             from benchmarks import speedup
 

@@ -1,0 +1,173 @@
+"""Serving micro-benchmarks: the batched subset-query sweep.
+
+Mines an IBM database once, builds the FI/rule indexes, then measures the
+``[Q, F]`` membership sweep three ways:
+
+  * **batched**   — ONE fused ``subset_superset_counts`` dispatch over the
+    whole query batch (the serving engine's shape; Pallas kernel on TPU,
+    jnp reference on CPU — on CPU this measures the algorithmic
+    reformulation only, as in ``benchmarks/kernels.py``);
+  * **per-query** — Q dispatches of ``[1, F]`` (the no-batching strawman: a
+    server answering queries as they arrive);
+  * **host numpy**— dense bool index + numpy bit-ops per query, the
+    conventional host-side implementation a TPU index replaces.
+
+plus end-to-end engine query types (support / rules / superset) at the
+configured batch width.  Results are printed as CSV lines and written to
+``BENCH_serve.json`` so the serving-perf trajectory is machine-readable
+across PRs.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import bitmap as bm  # noqa: E402
+from repro.core import eclat  # noqa: E402
+from repro.data.ibm_gen import IBMParams, generate_dense  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+from repro.serve import QueryEngine  # noqa: E402
+from repro.serve.index import build_indexes  # noqa: E402
+
+REPS = 5
+
+
+def _time(f, *args, reps=REPS):
+    jax.block_until_ready(f(*args))  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _host_numpy_sweep(fi_dense: np.ndarray, query_dense: np.ndarray):
+    """Per-query host loop over a dense bool index: (miss, extra) counts."""
+    miss = np.empty((query_dense.shape[0], fi_dense.shape[0]), np.int32)
+    extra = np.empty_like(miss)
+    for q in range(query_dense.shape[0]):
+        only_f = fi_dense & ~query_dense[q]
+        only_q = query_dense[q] & ~fi_dense
+        miss[q] = only_f.sum(axis=1)
+        extra[q] = only_q.sum(axis=1)
+    return miss, extra
+
+
+def run(fast: bool = False, out_path: str = "BENCH_serve.json"):
+    p = IBMParams(
+        n_tx=1024 if fast else 4096, n_items=48, n_patterns=30,
+        avg_pattern_len=6, avg_tx_len=10, seed=7,
+    )
+    dense = generate_dense(p)
+    minsup = int(np.ceil(0.05 * p.n_tx))
+    db = bm.BitmapDB.from_dense(jnp.asarray(dense))
+    res = eclat.mine_all(
+        db, minsup,
+        config=eclat.EclatConfig(max_out=1 << 15, max_stack=8192,
+                                 frontier_size=16),
+    )
+    # a truncated FI table is not downward closed -> rules would KeyError
+    assert int(res.stack_overflow) == 0 and int(res.n_total) == int(res.n_out)
+    fis = {}
+    n = int(res.n_out)
+    items = np.asarray(res.items[:n])
+    supps = np.asarray(res.supports[:n])
+    for row, s in zip(items, supps):
+        mask = np.asarray(bm.unpack_bool(jnp.asarray(row), p.n_items))
+        fis[frozenset(np.nonzero(mask)[0].tolist())] = int(s)
+    fi_index, rule_index = build_indexes(fis, p.n_items, p.n_tx,
+                                         min_confidence=0.6)
+    F, R = fi_index.n_fis, rule_index.n_rules
+    print(f"serve-bench: db={p.name} F={F} R={R} minsup={minsup}")
+
+    rng = np.random.default_rng(1)
+    entries = []
+    q_widths = [64, 256] if fast else [64, 256, 1024]
+    fi_dense = np.asarray(bm.unpack_bool(fi_index.masks, p.n_items))
+
+    for Q in q_widths:
+        rows = rng.choice(p.n_tx, size=Q, replace=True)
+        query_dense = dense[rows]
+        qp = jnp.asarray(np.asarray(bm.pack_bool(jnp.asarray(query_dense))))
+        shape = {"Q": Q, "F": F, "n_items": p.n_items}
+
+        # batched: one fused sweep
+        batched = jax.jit(lambda q: ops.subset_superset_counts(q, fi_index.masks))
+        us_batch = _time(batched, qp)
+
+        # per-query: Q dispatches of [1, F]
+        one = jax.jit(lambda q: ops.subset_superset_counts(q, fi_index.masks))
+        jax.block_until_ready(one(qp[:1]))
+
+        def per_query(qp=qp, Q=Q):
+            outs = [one(qp[j: j + 1]) for j in range(Q)]
+            jax.block_until_ready(outs[-1])
+            return outs
+
+        t0 = time.perf_counter()
+        reps = max(1, REPS // 2)
+        for _ in range(reps):
+            per_query()
+        us_loop = (time.perf_counter() - t0) / reps * 1e6
+
+        # host numpy over the dense index
+        t0 = time.perf_counter()
+        _host_numpy_sweep(fi_dense, query_dense)
+        us_host = (time.perf_counter() - t0) * 1e6
+
+        entries.append(dict(name="subset_query_batched", **shape, us=us_batch))
+        entries.append(dict(name="subset_query_per_query", **shape, us=us_loop,
+                            slowdown_vs_batched=us_loop / us_batch))
+        entries.append(dict(name="subset_query_host_numpy", **shape,
+                            us=us_host, slowdown_vs_batched=us_host / us_batch))
+        print(f"serve.subset_query_batched[Q={Q},F={F}],{us_batch:.1f},")
+        print(f"serve.subset_query_per_query[Q={Q},F={F}],{us_loop:.1f},"
+              f"slowdown_vs_batched={us_loop / us_batch:.2f}x")
+        print(f"serve.subset_query_host_numpy[Q={Q},F={F}],{us_host:.1f},"
+              f"slowdown_vs_batched={us_host / us_batch:.2f}x", flush=True)
+
+    # ---- end-to-end engine query types at one batch width -------------------
+    Q = q_widths[0]
+    engine = QueryEngine(fi_index, rule_index, batch=Q, top_k=5)
+    basket_masks = np.asarray(
+        bm.pack_bool(jnp.asarray(dense[rng.choice(p.n_tx, size=Q)]))
+    )
+    fi_rows = rng.choice(F, size=Q)
+    fi_masks = np.asarray(fi_index.masks)[fi_rows]
+
+    for name, fn, masks in [
+        ("engine_support", engine.support, fi_masks),
+        ("engine_rules_for", engine.rules_for, basket_masks),
+        ("engine_supersets", engine.supersets, fi_masks),
+    ]:
+        us = _time(lambda m=masks, f=fn: f(m), reps=max(1, REPS // 2))
+        entries.append(dict(name=name, Q=Q, F=F, R=R, us=us,
+                            us_per_query=us / Q))
+        print(f"serve.{name}[Q={Q}],{us:.1f},us_per_query={us / Q:.2f}",
+              flush=True)
+
+    payload = {
+        "bench": "serve",
+        "backend": jax.default_backend(),
+        "db": p.name,
+        "n_fis": F,
+        "n_rules": R,
+        "reps": REPS,
+        "fast": fast,
+        "entries": entries,
+    }
+    Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"[wrote {out_path}: {len(entries)} entries]", flush=True)
+    return entries
+
+
+if __name__ == "__main__":
+    run(fast="--fast" in sys.argv)

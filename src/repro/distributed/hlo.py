@@ -37,6 +37,17 @@ _GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
 
 
+def normalize_cost_analysis(ca) -> Dict:
+    """``Compiled.cost_analysis()`` across JAX versions.
+
+    Older releases return a one-element list of dicts (one per program),
+    newer ones the dict itself; either may be ``None`` for some backends.
+    """
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
+    return dict(ca) if ca else {}
+
+
 @dataclasses.dataclass
 class Collective:
     op: str

@@ -18,6 +18,7 @@ from repro.kernels import bitmap_support as _bs
 from repro.kernels import multi_support as _ms
 from repro.kernels import pair_support as _ps
 from repro.kernels import ref as _ref
+from repro.kernels import subset_query as _sq
 
 
 def _on_tpu() -> bool:
@@ -64,6 +65,25 @@ def multi_extension_supports(
     if use_mxu:
         return _ref.multi_extension_supports_mxu_ref(item_bits, prefix_tids)
     return _ref.multi_extension_supports_ref(item_bits, prefix_tids)
+
+
+def subset_superset_counts(
+    query_masks: jnp.ndarray,
+    fi_masks: jnp.ndarray,
+    *,
+    force: str | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``(miss, extra)`` int32[Q, F] set-difference popcounts (|f∖q|, |q∖f|).
+
+    The batched serving sweep (``repro.serve.engine``); force ∈ {None,
+    'pallas', 'ref', 'interpret'} selects the implementation.
+    """
+    mode = force or ("pallas" if _on_tpu() else "ref")
+    if mode in ("pallas", "interpret"):
+        return _sq.subset_superset_counts_pallas(
+            query_masks, fi_masks, interpret=(mode == "interpret")
+        )
+    return _ref.subset_superset_counts_ref(query_masks, fi_masks)
 
 
 def pair_supports(

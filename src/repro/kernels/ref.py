@@ -41,6 +41,22 @@ def pair_supports_mxu_ref(item_bits: jnp.ndarray, valid_tid: jnp.ndarray) -> jnp
     return jnp.dot(masked, masked.T).astype(jnp.int32)
 
 
+def subset_superset_counts_ref(
+    query_masks: jnp.ndarray, fi_masks: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``(miss, extra)`` int32[Q, F]: |f ∖ q| and |q ∖ f| per (query, FI) pair.
+
+    ``miss == 0`` ⇔ f ⊆ q;  ``extra == 0`` ⇔ q ⊆ f;  both ⇔ f = q.
+    Oracle of the fused serving kernel ``kernels.subset_query``.
+    """
+    only_f = fi_masks[None, :, :] & ~query_masks[:, None, :]   # [Q, F, IW]
+    only_q = query_masks[:, None, :] & ~fi_masks[None, :, :]
+    return (
+        bm.popcount_u32(only_f).sum(axis=-1),
+        bm.popcount_u32(only_q).sum(axis=-1),
+    )
+
+
 def multi_extension_supports_mxu_ref(
     item_bits: jnp.ndarray, prefix_tids: jnp.ndarray
 ) -> jnp.ndarray:

@@ -174,7 +174,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, overrides=None) -> dict
         t_compile = time.time() - t0 - t_lower
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = hlo_mod.normalize_cost_analysis(compiled.cost_analysis())
     txt = compiled.as_text()
     colls = hlo_mod.collective_summary(txt, world)
 

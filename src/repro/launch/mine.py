@@ -12,19 +12,10 @@ column-major; on this container use --devices to fork virtual CPU devices
 from __future__ import annotations
 
 import argparse
-import os
-import sys
 
+from repro.launch.host_devices import preparse_devices
 
-def _preparse_devices():
-    if "--devices" in sys.argv:
-        n = sys.argv[sys.argv.index("--devices") + 1]
-        os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={n}"
-        )
-
-
-_preparse_devices()
+preparse_devices()  # must run before anything imports jax
 
 import time  # noqa: E402
 

@@ -1,0 +1,18 @@
+"""Serving subsystem: mine once, serve many.
+
+Turns a mined FI table into a queryable online service (DESIGN.md,
+"Serving subsystem"):
+
+  * :mod:`repro.serve.index`  — immutable device-resident FI/rule indexes
+    (packed uint32 itemset masks + metric vectors + per-size offsets);
+  * :mod:`repro.serve.engine` — batched query engine: Q queries per
+    dispatch over the fused subset/superset Pallas sweep
+    (``repro.kernels.subset_query``);
+  * :mod:`repro.serve.cache`  — LRU query cache keyed on packed query
+    masks, with hit-rate counters.
+
+End-to-end driver: ``python -m repro.launch.serve_mine``.
+"""
+from repro.serve.cache import QueryCache  # noqa: F401
+from repro.serve.engine import QueryEngine  # noqa: F401
+from repro.serve.index import FIIndex, RuleIndex  # noqa: F401

@@ -1,0 +1,131 @@
+"""LRU query cache keyed on packed query masks.
+
+Real basket traffic is heavily repetitive (popular carts, hot itemsets), so
+the cheapest query is the one never dispatched.  The cache sits in front of
+the batched engine on the host: keys are the raw bytes of a packed uint32
+query mask plus the query kind and its static knobs — exact, collision-free
+and already in wire format (no canonicalization step; two baskets hash
+equal iff their bitmaps are equal).
+
+Plain ``OrderedDict`` LRU with hit/miss/eviction counters; the driver
+(`launch/serve_mine.py`) reports the hit rate next to QPS and latency.
+``split_batch`` is the serving-loop helper: partition a query batch into
+cached results and the de-duplicated miss set that still needs a dispatch
+(duplicates inside one batch dispatch once).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Dict, Hashable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def query_key(kind: str, packed_row: np.ndarray, *knobs: Hashable) -> Tuple:
+    """Cache key for one query: (kind, knobs..., mask bytes)."""
+    return (kind, *knobs, np.asarray(packed_row, np.uint32).tobytes())
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": self.hit_rate,
+        }
+
+
+class QueryCache:
+    """Bounded LRU over query results.
+
+    ``capacity <= 0`` disables caching (every lookup is a miss, nothing is
+    stored) so the serving loop needs no branches.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = capacity
+        self.stats = CacheStats()
+        self._data: "OrderedDict[Tuple, Any]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def get(self, key: Tuple) -> Optional[Any]:
+        if self.capacity <= 0 or key not in self._data:
+            self.stats.misses += 1
+            return None
+        self.stats.hits += 1
+        self._data.move_to_end(key)
+        return self._data[key]
+
+    def put(self, key: Tuple, value: Any) -> None:
+        if self.capacity <= 0:
+            return
+        if key in self._data:
+            self._data.move_to_end(key)
+        self._data[key] = value
+        if len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+            self.stats.evictions += 1
+
+    # -- batch helper ---------------------------------------------------------
+    def split_batch(
+        self, keys: Sequence[Tuple]
+    ) -> Tuple[List[Optional[Any]], List[int]]:
+        """Partition a batch into cached results and the miss set.
+
+        Returns ``(results, miss_positions)``: ``results[i]`` is the cached
+        value or None; ``miss_positions`` lists the indices still needing a
+        dispatch, **first occurrence only** (duplicate keys inside the batch
+        resolve from the first's result via :meth:`fill_batch`).
+        """
+        results: List[Optional[Any]] = []
+        miss: List[int] = []
+        seen: Dict[Tuple, int] = {}
+        for i, key in enumerate(keys):
+            hit = self.get(key)
+            if hit is not None:
+                results.append(hit)
+            else:
+                results.append(None)
+                if key not in seen:
+                    seen[key] = i
+                    miss.append(i)
+        return results, miss
+
+    def fill_batch(
+        self,
+        keys: Sequence[Tuple],
+        results: List[Optional[Any]],
+        miss_positions: Sequence[int],
+        miss_values: Sequence[Any],
+    ) -> List[Any]:
+        """Insert dispatched values, then resolve every remaining None.
+
+        Duplicates resolve from a per-batch map of the dispatched values, so
+        the result is complete even with caching disabled or under eviction
+        pressure.
+        """
+        batch_map: Dict[Tuple, Any] = {}
+        for pos, val in zip(miss_positions, miss_values):
+            self.put(keys[pos], val)
+            batch_map[keys[pos]] = val
+        for i, r in enumerate(results):
+            if r is None:
+                results[i] = batch_map[keys[i]]
+        return results

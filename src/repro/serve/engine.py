@@ -1,0 +1,245 @@
+"""Batched query engine over the FI/rule indexes.
+
+Answers Q queries per dispatch — the serving analogue of frontier batching
+(DESIGN.md): one fused ``[Q, F]`` subset/superset sweep
+(``kernels.subset_query``) instead of Q per-query launches, so the index
+slab streams from HBM once per batch and every lane stays busy.
+
+Three query types, all over packed uint32 query masks ``[Q, IW]``:
+
+  * :func:`support_lookup` — exact support of each queried itemset
+    (-1 if not frequent): equality is ``miss == 0 & extra == 0`` on the
+    set-difference counts, plus the size-band trick — only rows whose
+    cardinality equals the query's can match, so candidate scoring masks by
+    the index ``sizes`` vector (no host branching).
+  * :func:`top_rules_for_baskets` — the store-owner query: top-K rules by
+    confidence whose antecedent ⊆ basket; ``novel_only`` drops rules whose
+    consequent is already fully in the basket (a recommendation, not a
+    restatement).  One sweep over the stacked ``[2R, IW]`` antecedent ∥
+    consequent slab answers both tests.
+  * :func:`top_supersets` — completion query: top-K frequent supersets of a
+    (partial) itemset, by support; ties prefer fewer extra items.
+
+All three are jit-compiled with static K and static index row counts;
+results are (indices, score) pairs with index -1 ⇔ "no more hits", so a
+short result list never fabricates entries.
+
+:class:`QueryEngine` wraps the functions with a fixed batch width Q: every
+dispatch is padded to Q rows (one compiled program per query type, no
+recompiles mid-serve) — exactly how a production server amortizes traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rules as rules_mod
+from repro.kernels import ops
+from repro.serve.index import FIIndex, RuleIndex
+
+NOT_FOUND = -1
+
+
+# ---------------------------------------------------------------------------
+# Batched query primitives (jit; index pytrees as traced args)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def support_lookup(
+    index: FIIndex,
+    query_masks: jnp.ndarray,      # uint32[Q, IW]
+    query_sizes: jnp.ndarray,      # int32[Q] — |q| (popcount of the mask)
+    *,
+    force: Optional[str] = None,
+) -> jnp.ndarray:
+    """int32[Q] absolute supports; ``NOT_FOUND`` for non-frequent queries."""
+    miss, extra = ops.subset_superset_counts(query_masks, index.masks,
+                                            force=force)
+    # equality needs both difference counts zero; the size check is redundant
+    # given both counts but keeps the match honest on the all-zero pad row.
+    eq = (
+        (miss == 0)
+        & (extra == 0)
+        & (index.sizes[None, :] == query_sizes[:, None])
+        & index.valid()[None, :]
+    )
+    row = jnp.argmax(eq, axis=1)
+    found = eq.any(axis=1)
+    return jnp.where(found, index.supports[row], NOT_FOUND)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "novel_only", "force"))
+def top_rules_for_baskets(
+    rules: RuleIndex,
+    basket_masks: jnp.ndarray,     # uint32[Q, IW]
+    *,
+    k: int = 5,
+    novel_only: bool = True,
+    force: Optional[str] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(rule_rows int32[Q, k], confidence f32[Q, k]); row -1 ⇔ no hit.
+
+    A rule applies to basket q iff antecedent ⊆ q.  Ranking is by
+    confidence with support as tie-break (the RuleIndex row order).
+    """
+    R = rules.r_pad
+    # one sweep over the stacked antecedent ∥ consequent slab: [Q, 2R]
+    miss, _ = ops.subset_superset_counts(basket_masks, rules.ant_con,
+                                         force=force)
+    applies = (miss[:, :R] == 0) & rules.valid()[None, :]
+    if novel_only:
+        applies &= miss[:, R:] > 0
+    # rows are confidence-sorted, so rank by (applies, confidence): boosting
+    # applicable rows by 2 (> max confidence 1) keeps relative order.
+    score = rules.confidence[None, :] + 2.0 * applies
+    top_score, top_row = _top_k_padded(score, k)
+    hit = top_score >= 2.0
+    return (
+        jnp.where(hit, top_row, NOT_FOUND),
+        jnp.where(hit, top_score - 2.0, jnp.float32(jnp.nan)),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "proper", "force"))
+def top_supersets(
+    index: FIIndex,
+    query_masks: jnp.ndarray,      # uint32[Q, IW]
+    *,
+    k: int = 5,
+    proper: bool = False,
+    force: Optional[str] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(fi_rows int32[Q, k], supports int32[Q, k]); row -1 ⇔ no hit.
+
+    Frequent supersets of each query, by support descending; among equal
+    supports, fewer missing items (|f ∖ q|) first — the closest completion
+    wins.  ``proper`` excludes the queried itemset itself.
+    """
+    miss, extra = ops.subset_superset_counts(query_masks, index.masks,
+                                             force=force)
+    is_sup = (extra == 0) & index.valid()[None, :]
+    if proper:
+        is_sup &= miss > 0
+    # lexicographic (support ↓, |f∖q| ↑): a stable two-key sort, exact for
+    # any n_tx (folding both keys into one integer would overflow int32
+    # once n_tx·(n_items+1) ≥ 2³¹).
+    sentinel = jnp.iinfo(jnp.int32).max
+    key_supp = jnp.where(is_sup, -index.supports[None, :], sentinel)
+    key_miss = jnp.where(is_sup, miss, sentinel)
+    top_key, top_row = _lex_smallest_k(key_supp, key_miss, k)
+    hit = top_key != sentinel
+    return (
+        jnp.where(hit, top_row, NOT_FOUND),
+        jnp.where(hit, -top_key, NOT_FOUND),
+    )
+
+
+def _top_k_padded(score: jnp.ndarray, k: int):
+    """lax.top_k that tolerates k > score columns (pad with -inf rows)."""
+    cols = score.shape[-1]
+    if k <= cols:
+        return jax.lax.top_k(score, k)
+    lowest = (
+        -jnp.inf if jnp.issubdtype(score.dtype, jnp.floating)
+        else jnp.iinfo(score.dtype).min
+    )
+    pad = jnp.full(score.shape[:-1] + (k - cols,), lowest, score.dtype)
+    return jax.lax.top_k(jnp.concatenate([score, pad], axis=-1), k)
+
+
+def _lex_smallest_k(key1: jnp.ndarray, key2: jnp.ndarray, k: int):
+    """Per row, the k columns with lexicographically smallest (key1, key2).
+
+    Returns ``(key1 values, column indices)``, both ``[Q, k]``; the stable
+    sort makes equal keys resolve by column index, so results are
+    deterministic.  ``k`` beyond the column count pads with int32 max / -1.
+    """
+    Q, F = key1.shape
+    idx = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (Q, F))
+    s1, _, rows = jax.lax.sort((key1, key2, idx), num_keys=2, is_stable=True)
+    if k > F:
+        s1 = jnp.pad(s1, ((0, 0), (0, k - F)),
+                     constant_values=jnp.iinfo(jnp.int32).max)
+        rows = jnp.pad(rows, ((0, 0), (0, k - F)), constant_values=NOT_FOUND)
+    return s1[:, :k], rows[:, :k]
+
+
+# ---------------------------------------------------------------------------
+# Fixed-batch engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QueryEngine:
+    """Serving facade with a fixed dispatch width.
+
+    Every call pads its query rows to ``batch`` (shape-stable jit, one
+    compiled program per query type for the whole serving session) and
+    slices real rows back out.  ``force`` pins the kernel backend the same
+    way ``kernels.ops`` does (None = auto: Pallas on TPU, jnp ref on CPU).
+    """
+
+    index: FIIndex
+    rules: Optional[RuleIndex] = None
+    batch: int = 256
+    top_k: int = 5
+    force: Optional[str] = None
+
+    def _pad(self, masks: np.ndarray) -> Tuple[jnp.ndarray, int]:
+        q = np.asarray(masks, np.uint32)
+        assert q.ndim == 2 and q.shape[1] == self.index.n_words, q.shape
+        n = q.shape[0]
+        assert n <= self.batch, f"query batch {n} exceeds width {self.batch}"
+        return jnp.asarray(_pad_to(q, self.batch)), n
+
+    # -- typed entry points (packed masks in, numpy out) ---------------------
+    def support(self, masks: np.ndarray) -> np.ndarray:
+        """int32[n] supports (NOT_FOUND = not frequent / not indexed)."""
+        qp, n = self._pad(masks)
+        sizes = _popcount_rows(qp)
+        out = support_lookup(self.index, qp, sizes, force=self.force)
+        return np.asarray(out)[:n]
+
+    def rules_for(
+        self, masks: np.ndarray, *, novel_only: bool = True
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(rule rows [n, k], confidences [n, k]) for basket masks."""
+        assert self.rules is not None, "engine built without a RuleIndex"
+        qp, n = self._pad(masks)
+        rows, conf = top_rules_for_baskets(
+            self.rules, qp, k=self.top_k, novel_only=novel_only,
+            force=self.force,
+        )
+        return np.asarray(rows)[:n], np.asarray(conf)[:n]
+
+    def supersets(
+        self, masks: np.ndarray, *, proper: bool = False
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(FI rows [n, k], supports [n, k]) for itemset masks."""
+        qp, n = self._pad(masks)
+        rows, supp = top_supersets(
+            self.index, qp, k=self.top_k, proper=proper, force=self.force,
+        )
+        return np.asarray(rows)[:n], np.asarray(supp)[:n]
+
+    # -- convenience: python itemsets in --------------------------------------
+    def pack(self, itemsets) -> np.ndarray:
+        return rules_mod.pack_itemsets(list(itemsets), self.index.n_items)
+
+
+def _pad_to(a: np.ndarray, n: int) -> np.ndarray:
+    if a.shape[0] == n:
+        return a
+    return np.pad(a, [(0, n - a.shape[0])] + [(0, 0)] * (a.ndim - 1))
+
+
+def _popcount_rows(packed: jnp.ndarray) -> jnp.ndarray:
+    from repro.core import bitmap as bm
+
+    return bm.popcount_u32(packed).sum(axis=-1)

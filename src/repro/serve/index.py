@@ -1,0 +1,233 @@
+"""Immutable, device-resident indexes over a mined FI table.
+
+The distributed-mining literature treats the mined set as an *index to be
+queried at scale* (arXiv:1903.03008); this module is that index in TPU
+shape.  Both structures are frozen pytrees of dense device arrays — no
+pointers, no hashing — so a query batch is pure vector work against them:
+
+  * :class:`FIIndex` — the F frequent itemsets as packed uint32 masks
+    ``[F, IW]`` (layout of ``core.bitmap.pack_bool``) plus a support vector,
+    a per-itemset size vector, and **per-size offsets**: rows are sorted by
+    (|itemset|, lexicographic), so all size-s itemsets form the contiguous
+    band ``[size_offsets[s], size_offsets[s+1])`` — the engine uses the
+    size band to skip impossible exact-match candidates and callers can
+    slice a band for level-wise scans.
+  * :class:`RuleIndex` — a :class:`repro.core.rules.RuleTable` on device,
+    antecedent and consequent masks stacked into ONE ``[2R, IW]`` slab so a
+    basket query answers "which antecedents apply" and "which consequents
+    are already owned" from a single fused sweep.
+
+Row counts F and R are static python ints; arrays are padded to at least
+one row so zero-FI / zero-rule corner cases keep static shapes (padded rows
+are excluded via the static count, never by a device-side sentinel scan).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmap as bm
+from repro.core import rules as rules_mod
+
+_U32 = jnp.uint32
+
+
+def _pad_rows(a: np.ndarray, n: int) -> np.ndarray:
+    """Pad axis 0 up to ``n`` rows with zeros (no-op if already there)."""
+    if a.shape[0] >= n:
+        return a
+    pad = [(0, n - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return np.pad(a, pad)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FIIndex:
+    """The mined FI table as a queryable device structure.
+
+    Attributes:
+      masks:    ``uint32[Fp, IW]`` packed itemset masks, sorted by
+                (size, lexicographic); ``Fp = max(F, 1)``.
+      supports: ``int32[Fp]`` absolute supports.
+      sizes:    ``int32[Fp]`` itemset cardinalities (|f|).
+      n_fis:    F — number of valid rows (static).
+      n_items:  |B| (static).
+      n_tx:     |D| (static) — denominator for relative support.
+      size_offsets: static tuple; size-s rows live at
+                ``[size_offsets[s], size_offsets[s+1])``, s ∈ [0, max_size].
+    """
+
+    masks: jnp.ndarray
+    supports: jnp.ndarray
+    sizes: jnp.ndarray
+    n_fis: int
+    n_items: int
+    n_tx: int
+    size_offsets: Tuple[int, ...]
+
+    def tree_flatten(self):
+        return (
+            (self.masks, self.supports, self.sizes),
+            (self.n_fis, self.n_items, self.n_tx, self.size_offsets),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    # -- constructors ---------------------------------------------------------
+    @classmethod
+    def from_fi_dict(
+        cls, fis: Dict[frozenset, int], n_items: int, n_tx: int
+    ) -> "FIIndex":
+        """Build from a materialized ``{frozenset: support}`` table."""
+        order = sorted(fis, key=lambda s: (len(s), tuple(sorted(s))))
+        F = len(order)
+        masks = rules_mod.pack_itemsets(order, n_items)
+        supports = np.asarray([fis[s] for s in order], np.int32)
+        sizes = np.asarray([len(s) for s in order], np.int32)
+        max_size = int(sizes.max()) if F else 0
+        offsets = tuple(
+            int(np.searchsorted(sizes, s)) for s in range(max_size + 1)
+        ) + (F,)
+        return cls(
+            masks=jnp.asarray(_pad_rows(masks, 1)),
+            supports=jnp.asarray(_pad_rows(supports, 1)),
+            sizes=jnp.asarray(_pad_rows(sizes, 1)),
+            n_fis=F,
+            n_items=n_items,
+            n_tx=n_tx,
+            size_offsets=offsets,
+        )
+
+    @classmethod
+    def from_result(
+        cls, result, n_items: int, n_tx: int, abs_minsup: int
+    ) -> "FIIndex":
+        """Build from a ``fimi.FimiResult`` (materializes if needed)."""
+        from repro.core import fimi
+
+        fis = result.fi_dict
+        if fis is None:
+            fis = fimi.materialize_fis(result, n_items, abs_minsup)
+        return cls.from_fi_dict(fis, n_items, n_tx)
+
+    # -- views ----------------------------------------------------------------
+    @property
+    def n_words(self) -> int:
+        return int(self.masks.shape[-1])
+
+    @property
+    def max_size(self) -> int:
+        return len(self.size_offsets) - 2
+
+    def valid(self) -> jnp.ndarray:
+        """bool[Fp] — True for real rows, False for shape padding."""
+        return jnp.arange(self.masks.shape[0]) < self.n_fis
+
+    def size_band(self, s: int) -> Tuple[int, int]:
+        """Row range [lo, hi) of size-s itemsets (empty if s out of range)."""
+        if s < 0 or s > self.max_size:
+            return (0, 0)
+        return (self.size_offsets[s], self.size_offsets[s + 1])
+
+    def itemset(self, row: int) -> frozenset:
+        """Unpack row back to a python itemset (debug/printing)."""
+        mask = np.asarray(
+            bm.unpack_bool(self.masks[row], self.n_items)
+        )
+        return frozenset(np.nonzero(mask)[0].tolist())
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class RuleIndex:
+    """A :class:`~repro.core.rules.RuleTable` as device arrays.
+
+    ``ant_con`` stacks antecedent masks (rows ``[0, R)``) and consequent
+    masks (rows ``[R, 2R)``) so the engine's basket query computes
+    applicability and novelty with one fused ``[Q, 2R]`` sweep.  Rows are
+    sorted by (confidence, support) descending — ties aside, row order IS
+    rule rank, which the top-K kernel exploits.
+    """
+
+    ant_con: jnp.ndarray      # uint32[2·Rp, IW]
+    supports: jnp.ndarray     # int32[Rp]
+    confidence: jnp.ndarray   # float32[Rp]
+    lift: jnp.ndarray         # float32[Rp]
+    leverage: jnp.ndarray     # float32[Rp]
+    n_rules: int
+    n_items: int
+    n_tx: int
+
+    def tree_flatten(self):
+        return (
+            (self.ant_con, self.supports, self.confidence, self.lift,
+             self.leverage),
+            (self.n_rules, self.n_items, self.n_tx),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @classmethod
+    def from_table(cls, table: rules_mod.RuleTable) -> "RuleIndex":
+        Rp = max(table.n_rules, 1)
+        ant = _pad_rows(table.antecedents, Rp)
+        con = _pad_rows(table.consequents, Rp)
+        return cls(
+            ant_con=jnp.asarray(np.concatenate([ant, con], axis=0)),
+            supports=jnp.asarray(_pad_rows(table.supports, Rp)),
+            confidence=jnp.asarray(_pad_rows(table.confidence, Rp)),
+            lift=jnp.asarray(_pad_rows(table.lift, Rp)),
+            leverage=jnp.asarray(_pad_rows(table.leverage, Rp)),
+            n_rules=table.n_rules,
+            n_items=table.n_items,
+            n_tx=table.n_tx,
+        )
+
+    # -- views ----------------------------------------------------------------
+    @property
+    def r_pad(self) -> int:
+        """Padded row count Rp (``ant_con`` holds 2·Rp rows)."""
+        return int(self.ant_con.shape[0]) // 2
+
+    def valid(self) -> jnp.ndarray:
+        return jnp.arange(self.r_pad) < self.n_rules
+
+    def antecedents(self) -> jnp.ndarray:
+        return self.ant_con[: self.r_pad]
+
+    def consequents(self) -> jnp.ndarray:
+        return self.ant_con[self.r_pad:]
+
+    def rule(self, row: int) -> rules_mod.Rule:
+        """Unpack rule ``row`` for printing (host round-trip)."""
+        ant = np.asarray(bm.unpack_bool(self.antecedents()[row], self.n_items))
+        con = np.asarray(bm.unpack_bool(self.consequents()[row], self.n_items))
+        return rules_mod.Rule(
+            frozenset(np.nonzero(ant)[0].tolist()),
+            frozenset(np.nonzero(con)[0].tolist()),
+            int(self.supports[row]),
+            float(self.confidence[row]),
+            float(self.lift[row]),
+            float(self.leverage[row]),
+        )
+
+
+def build_indexes(
+    fis: Dict[frozenset, int],
+    n_items: int,
+    n_tx: int,
+    min_confidence: float = 0.5,
+) -> Tuple[FIIndex, RuleIndex]:
+    """One-call build: FI index + rules (ap-genrules) + rule index."""
+    fi_index = FIIndex.from_fi_dict(fis, n_items, n_tx)
+    rl = rules_mod.generate_rules(fis, n_tx, min_confidence)
+    table = rules_mod.RuleTable.from_rules(rl, n_items, n_tx)
+    return fi_index, RuleIndex.from_table(table)

@@ -124,10 +124,6 @@ def test_spec_for_divisibility_and_conflicts():
 
     from repro.distributed.sharding import default_rules, spec_for
 
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
     # use a fake mesh shape via dict-like: spec_for only reads mesh.shape
     class FakeMesh:
         shape = {"data": 16, "model": 16}

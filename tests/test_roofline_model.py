@@ -21,7 +21,12 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks import roofline  # noqa: E402
 from repro.configs.base import ModelConfig, ShapeConfig  # noqa: E402
+from repro.distributed.hlo import normalize_cost_analysis  # noqa: E402
 from repro.models import model as M  # noqa: E402
+
+
+def _flops(compiled) -> float:
+    return normalize_cost_analysis(compiled.cost_analysis())["flops"]
 
 
 def test_cost_analysis_counts_loop_bodies_once():
@@ -34,8 +39,8 @@ def test_cost_analysis_counts_loop_bodies_once():
         out, _ = jax.lax.scan(lambda c, _: (c @ w, None), w, None, length=10)
         return out
 
-    f1 = jax.jit(one).lower(w).compile().cost_analysis()["flops"]
-    f10 = jax.jit(scanned).lower(w).compile().cost_analysis()["flops"]
+    f1 = _flops(jax.jit(one).lower(w).compile())
+    f10 = _flops(jax.jit(scanned).lower(w).compile())
     assert f1 == f10  # the pinned behaviour
 
 
@@ -57,7 +62,7 @@ def test_analytic_fwd_flops_matches_unrolled_xla():
         return M.forward(cfg1, p, b)
 
     c1 = jax.jit(fwd1).lower(M.abstract(cfg1), batch).compile()
-    xla1 = c1.cost_analysis()["flops"]
+    xla1 = _flops(c1)
 
     cfg0 = ModelConfig(**{**cfg.__dict__, "n_layers": 1, "d_ff": 384})
     # layer cost = flops(1 layer) - flops(embedding+logits); estimate the

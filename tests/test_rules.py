@@ -1,0 +1,131 @@
+"""core/rules.py: ap-genrules vs brute-force enumeration + metric values."""
+import numpy as np
+import pytest
+
+from repro.core import eclat
+from repro.core import rules as R
+
+
+# ---------------------------------------------------------------------------
+# Hand-checked toy database (the classic market-basket example)
+# ---------------------------------------------------------------------------
+
+# items: 0=bread 1=milk 2=diaper 3=beer 4=cola 5=eggs
+TOY = np.zeros((5, 6), bool)
+for t, items in enumerate([
+    {0, 1}, {0, 2, 3, 5}, {1, 2, 3, 4}, {0, 1, 2, 3}, {0, 1, 2, 4},
+]):
+    TOY[t, list(items)] = True
+
+
+def toy_fis():
+    return eclat.brute_force_fis(TOY, 1)  # minsup 1: every occurring itemset
+
+
+def test_toy_metrics_hand_checked():
+    fis = toy_fis()
+    rules = {r.key(): r for r in R.generate_rules(fis, 5, 0.5)}
+
+    # {beer} -> {diaper}: supp({2,3})=3, supp({3})=3, supp({2})=4
+    r = rules[(frozenset({3}), frozenset({2}))]
+    assert r.support == 3
+    assert r.confidence == pytest.approx(1.0)
+    assert r.lift == pytest.approx(1.0 / (4 / 5))          # 1.25
+    assert r.leverage == pytest.approx(3 / 5 - (3 / 5) * (4 / 5))  # 0.12
+
+    # {diaper} -> {beer}: conf 3/4, lift (3/4)/(3/5), leverage symmetric
+    r = rules[(frozenset({2}), frozenset({3}))]
+    assert r.confidence == pytest.approx(3 / 4)
+    assert r.lift == pytest.approx((3 / 4) / (3 / 5))
+    assert r.leverage == pytest.approx(0.12)
+
+    # {milk} -> {bread}: supp({0,1})=3, supp({1})=4 -> conf 0.75, lift
+    # 0.75/0.8 < 1 (negatively correlated), leverage negative
+    r = rules[(frozenset({1}), frozenset({0}))]
+    assert r.confidence == pytest.approx(3 / 4)
+    assert r.lift == pytest.approx((3 / 4) / (4 / 5))
+    assert r.lift < 1 and r.leverage < 0
+
+    # conf below threshold is absent: {bread} -> {cola} has conf 1/4
+    assert (frozenset({0}), frozenset({4})) not in rules
+    # conf exactly at threshold is kept: {bread} -> {beer} has conf 2/4
+    assert (frozenset({0}), frozenset({3})) in rules
+
+
+def test_toy_multi_item_consequent():
+    """ap-genrules reaches |consequent| >= 2 (the apriori-join recursion)."""
+    fis = toy_fis()
+    rules = {r.key(): r for r in R.generate_rules(fis, 5, 0.5)}
+    # {beer} -> {milk? no} ... take Z={1,2,4}: supp=2, X={4}: supp({4})=2
+    r = rules[(frozenset({4}), frozenset({1, 2}))]
+    assert r.support == 2 and r.confidence == pytest.approx(1.0)
+    assert any(len(k[1]) >= 2 for k in rules)
+
+
+@pytest.mark.parametrize("seed,min_conf", [
+    (0, 0.3), (0, 0.7), (1, 0.5), (2, 0.9), (3, 0.5),
+])
+def test_ap_genrules_matches_brute_force(seed, min_conf):
+    from repro.data.ibm_gen import IBMParams, generate_dense
+
+    dense = generate_dense(
+        IBMParams(n_tx=256, n_items=18, n_patterns=6, avg_pattern_len=5,
+                  avg_tx_len=7, seed=seed)
+    )
+    n_tx = dense.shape[0]
+    fis = eclat.brute_force_fis(dense, int(np.ceil(0.08 * n_tx)))
+    got = {r.key(): r for r in R.generate_rules(fis, n_tx, min_conf)}
+    want = R.brute_force_rules(fis, n_tx, min_conf)
+    assert set(got) == set(want)
+    for k, r in got.items():
+        assert r.support == want[k].support
+        assert r.confidence == pytest.approx(want[k].confidence)
+        assert r.lift == pytest.approx(want[k].lift)
+        assert r.leverage == pytest.approx(want[k].leverage)
+
+
+def test_generate_rules_empty_and_singletons():
+    assert R.generate_rules({}, 10, 0.5) == []
+    assert R.generate_rules({frozenset({1}): 5}, 10, 0.5) == []
+
+
+def test_rule_table_sorted_and_roundtrips():
+    fis = toy_fis()
+    rules = R.generate_rules(fis, 5, 0.5)
+    table = R.RuleTable.from_rules(rules, 6, 5)
+    assert table.n_rules == len(rules)
+    conf = table.confidence
+    assert (conf[:-1] >= conf[1:]).all()  # sorted descending
+    # support breaks confidence ties
+    for i in range(table.n_rules - 1):
+        if conf[i] == conf[i + 1]:
+            assert table.supports[i] >= table.supports[i + 1]
+    # pack/unpack roundtrip preserves the rule set
+    got = {table.rule(i).key() for i in range(table.n_rules)}
+    assert got == {r.key() for r in rules}
+
+
+def test_pack_itemsets_layout():
+    """pack_itemsets (host) matches core.bitmap.pack_bool (device layout)."""
+    import jax.numpy as jnp
+
+    from repro.core import bitmap as bm
+
+    sets = [frozenset({0, 31, 32, 63, 64}), frozenset(), frozenset({65})]
+    n_items = 70
+    packed = R.pack_itemsets(sets, n_items)
+    dense = np.zeros((3, n_items), bool)
+    for r, s in enumerate(sets):
+        dense[r, list(s)] = True
+    want = np.asarray(bm.pack_bool(jnp.asarray(dense)))
+    np.testing.assert_array_equal(packed, want)
+
+
+def test_top_rules_and_format():
+    fis = toy_fis()
+    rules = R.generate_rules(fis, 5, 0.5)
+    top = R.top_rules(rules, 3)
+    assert len(top) == 3
+    assert top[0].confidence == max(r.confidence for r in rules)
+    line = R.format_rule(top[0], 5)
+    assert "->" in line and "conf=" in line and "lift=" in line

@@ -1,0 +1,295 @@
+"""Serving subsystem: subset_query kernel parity, index, engine, cache."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.core import rules as rules_mod
+from repro.kernels import ops, ref
+from repro.kernels import subset_query as sq
+from repro.serve import FIIndex, QueryCache, QueryEngine, RuleIndex
+from repro.serve.cache import query_key
+from repro.serve.index import build_indexes
+
+
+def _random_masks(n, n_items, seed, density=0.25):
+    rng = np.random.default_rng(seed)
+    dense = rng.random((n, n_items)) < density
+    return dense, jnp.asarray(np.asarray(bm.pack_bool(jnp.asarray(dense))))
+
+
+# ---------------------------------------------------------------------------
+# subset_query kernel: interpret-mode parity vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+# ragged (Q, F, n_items): sub-tile, tile-aligned, prime, multi-word masks
+QUERY_SHAPES = [
+    (1, 1, 5),
+    (7, 33, 17),
+    (64, 128, 32),
+    (13, 257, 40),
+    (130, 517, 96),
+    (3, 9, 200),
+]
+
+
+@pytest.mark.parametrize("q,f,n_items", QUERY_SHAPES)
+def test_subset_query_kernel_sweep(q, f, n_items):
+    qd, qp = _random_masks(q, n_items, seed=q + f, density=0.3)
+    fd, fp = _random_masks(f, n_items, seed=q * f + 1, density=0.15)
+    want_miss, want_extra = ref.subset_superset_counts_ref(qp, fp)
+    got_miss, got_extra = sq.subset_superset_counts_pallas(
+        qp, fp, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(got_miss), np.asarray(want_miss))
+    np.testing.assert_array_equal(np.asarray(got_extra), np.asarray(want_extra))
+    # dense-bool semantics: miss = |f \ q|, extra = |q \ f|
+    np.testing.assert_array_equal(
+        np.asarray(want_miss), (fd[None, :, :] & ~qd[:, None, :]).sum(-1)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(want_extra), (qd[:, None, :] & ~fd[None, :, :]).sum(-1)
+    )
+
+
+@pytest.mark.parametrize("block_q,block_f,block_w", [
+    (8, 8, 1), (16, 64, 2), (128, 128, 8),
+])
+def test_subset_query_block_shapes(block_q, block_f, block_w):
+    _, qp = _random_masks(27, 53, seed=1)
+    _, fp = _random_masks(91, 53, seed=2)
+    want = ref.subset_superset_counts_ref(qp, fp)
+    got = sq.subset_superset_counts_pallas(
+        qp, fp, block_q=block_q, block_f=block_f, block_w=block_w,
+        interpret=True,
+    )
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_subset_query_membership_semantics():
+    """miss==0 ⇔ f ⊆ q and extra==0 ⇔ q ⊆ f, cross-checked via python sets."""
+    qd, qp = _random_masks(20, 24, seed=5, density=0.4)
+    fd, fp = _random_masks(40, 24, seed=6, density=0.2)
+    miss, extra = ref.subset_superset_counts_ref(qp, fp)
+    for i in range(20):
+        qs = set(np.nonzero(qd[i])[0])
+        for j in range(40):
+            fs = set(np.nonzero(fd[j])[0])
+            assert (miss[i, j] == 0) == fs.issubset(qs)
+            assert (extra[i, j] == 0) == qs.issubset(fs)
+
+
+def test_subset_query_ops_dispatch():
+    _, qp = _random_masks(9, 30, seed=7)
+    _, fp = _random_masks(31, 30, seed=8)
+    a = ops.subset_superset_counts(qp, fp)
+    b = ops.subset_superset_counts(qp, fp, force="interpret")
+    c = ops.subset_superset_counts(qp, fp, force="ref")
+    for x, y, z in zip(a, b, c):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
+
+
+# ---------------------------------------------------------------------------
+# FI index
+# ---------------------------------------------------------------------------
+
+
+def test_fi_index_layout_and_bands(small_db):
+    dense, db, minsup, oracle = small_db
+    idx = FIIndex.from_fi_dict(oracle, db.n_items, db.n_tx)
+    assert idx.n_fis == len(oracle)
+    sizes = np.asarray(idx.sizes)[: idx.n_fis]
+    assert (np.diff(sizes) >= 0).all()  # sorted by size
+    for s in range(1, idx.max_size + 1):
+        lo, hi = idx.size_band(s)
+        assert (sizes[lo:hi] == s).all()
+        assert hi - lo == sum(1 for f in oracle if len(f) == s)
+    assert idx.size_band(idx.max_size + 3) == (0, 0)
+    # row -> itemset -> support roundtrip
+    for row in (0, idx.n_fis // 2, idx.n_fis - 1):
+        assert oracle[idx.itemset(row)] == int(idx.supports[row])
+
+
+def test_engine_support_lookup(small_db):
+    dense, db, minsup, oracle = small_db
+    idx = FIIndex.from_fi_dict(oracle, db.n_items, db.n_tx)
+    engine = QueryEngine(idx, batch=64, top_k=3)
+    sets = sorted(oracle, key=lambda s: (len(s), tuple(sorted(s))))
+    rng = np.random.default_rng(0)
+    pick = [sets[i] for i in rng.choice(len(sets), size=40, replace=False)]
+    # a known-infrequent probe and the (never-frequent-here) empty set
+    pick += [frozenset(range(12)), frozenset()]
+    got = engine.support(engine.pack(pick))
+    want = [oracle.get(s, -1) for s in pick]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_empty_index_and_rules():
+    idx, rules = build_indexes({}, 16, 100, min_confidence=0.5)
+    assert idx.n_fis == 0 and rules.n_rules == 0
+    engine = QueryEngine(idx, rules, batch=4, top_k=2)
+    masks = engine.pack([frozenset({1, 2}), frozenset()])
+    np.testing.assert_array_equal(engine.support(masks), [-1, -1])
+    rows, _ = engine.rules_for(masks)
+    assert (rows == -1).all()
+    rows, supp = engine.supersets(masks)
+    assert (rows == -1).all() and (supp == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# Engine: rules + supersets vs host brute force
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served(request):
+    small = request.getfixturevalue("small_db")
+    dense, db, minsup, oracle = small
+    fi_idx, rule_idx = build_indexes(oracle, db.n_items, db.n_tx,
+                                     min_confidence=0.6)
+    engine = QueryEngine(fi_idx, rule_idx, batch=32, top_k=5)
+    return dense, db, oracle, fi_idx, rule_idx, engine
+
+
+def test_engine_top_rules_vs_host(served):
+    dense, db, oracle, fi_idx, rule_idx, engine = served
+    all_rules = [rule_idx.rule(j) for j in range(rule_idx.n_rules)]
+    baskets = [frozenset(np.nonzero(dense[t])[0].tolist())
+               for t in range(12)]
+    rows, conf = engine.rules_for(engine.pack(baskets))
+    for qi, basket in enumerate(baskets):
+        app = sorted(
+            (r for r in all_rules
+             if r.antecedent <= basket and not r.consequent <= basket),
+            key=lambda r: (-r.confidence, -r.support),
+        )
+        n_hit = int((rows[qi] >= 0).sum())
+        assert n_hit == min(5, len(app))
+        for j in range(n_hit):
+            assert conf[qi, j] == pytest.approx(app[j].confidence, abs=1e-6)
+            r = rule_idx.rule(int(rows[qi, j]))
+            assert r.antecedent <= basket and not r.consequent <= basket
+
+
+def test_engine_top_rules_novel_only_off(served):
+    dense, db, oracle, fi_idx, rule_idx, engine = served
+    baskets = [frozenset(np.nonzero(dense[t])[0].tolist()) for t in range(6)]
+    rows_all, _ = engine.rules_for(engine.pack(baskets), novel_only=False)
+    for qi, basket in enumerate(baskets):
+        for j in range(int((rows_all[qi] >= 0).sum())):
+            r = rule_idx.rule(int(rows_all[qi, j]))
+            assert r.antecedent <= basket  # consequent may be owned
+
+
+def test_engine_top_supersets_vs_host(served):
+    dense, db, oracle, fi_idx, rule_idx, engine = served
+    queries = [frozenset({i}) for i in range(8)] + [frozenset()]
+    rows, supp = engine.supersets(engine.pack(queries), proper=True)
+    for qi, q in enumerate(queries):
+        sups = sorted((s for f, s in oracle.items() if q < f), reverse=True)
+        n_hit = int((rows[qi] >= 0).sum())
+        assert n_hit == min(5, len(sups))
+        np.testing.assert_array_equal(supp[qi][:n_hit], sups[:n_hit])
+        for j in range(n_hit):
+            assert q < fi_idx.itemset(int(rows[qi, j]))
+
+
+def test_engine_supersets_includes_self_when_not_proper(served):
+    dense, db, oracle, fi_idx, rule_idx, engine = served
+    q = max(oracle, key=lambda s: (len(s), oracle[s]))  # a maximal FI
+    rows, supp = engine.supersets(engine.pack([q]), proper=False)
+    assert rows[0, 0] >= 0
+    assert fi_idx.itemset(int(rows[0, 0])) == q
+    assert int(supp[0, 0]) == oracle[q]
+
+
+def test_rule_index_stacked_slab(served):
+    """ant_con really is antecedents ∥ consequents (the one-sweep layout)."""
+    *_, rule_idx, _ = served
+    R = rule_idx.r_pad
+    assert rule_idx.ant_con.shape[0] == 2 * R
+    np.testing.assert_array_equal(
+        np.asarray(rule_idx.ant_con[:R]), np.asarray(rule_idx.antecedents())
+    )
+    np.testing.assert_array_equal(
+        np.asarray(rule_idx.ant_con[R:]), np.asarray(rule_idx.consequents())
+    )
+    # no antecedent overlaps its consequent
+    inter = np.asarray(rule_idx.antecedents()) & np.asarray(
+        rule_idx.consequents()
+    )
+    assert (inter[: rule_idx.n_rules] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# LRU cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_lru_eviction_order():
+    c = QueryCache(capacity=2)
+    ka, kb, kc = (query_key("support", np.asarray([i], np.uint32)) for i in
+                  (1, 2, 3))
+    c.put(ka, "a"), c.put(kb, "b")
+    assert c.get(ka) == "a"       # refreshes a
+    c.put(kc, "c")                # evicts b (LRU), not a
+    assert c.get(kb) is None
+    assert c.get(ka) == "a" and c.get(kc) == "c"
+    assert c.stats.evictions == 1
+
+
+def test_cache_disabled_capacity_zero():
+    c = QueryCache(capacity=0)
+    k = query_key("support", np.asarray([7], np.uint32))
+    c.put(k, "x")
+    assert len(c) == 0 and c.get(k) is None
+    assert c.stats.misses == 1 and c.stats.hit_rate == 0.0
+
+
+def test_cache_split_fill_with_duplicates():
+    c = QueryCache(capacity=8)
+    masks = np.asarray([[1], [2], [1], [3], [2]], np.uint32)
+    keys = [query_key("rules", m, 5) for m in masks]
+    results, miss = c.split_batch(keys)
+    assert miss == [0, 1, 3]      # duplicates dispatch once
+    out = c.fill_batch(keys, results, miss, ["r1", "r2", "r3"])
+    assert out == ["r1", "r2", "r1", "r3", "r2"]
+    # second pass: all hits
+    results2, miss2 = c.split_batch(keys)
+    assert miss2 == [] and results2 == out
+    assert c.stats.hits == 5 and c.stats.misses == 5
+
+
+def test_cache_key_distinguishes_kind_and_knobs():
+    m = np.asarray([9], np.uint32)
+    assert query_key("support", m) != query_key("superset", m)
+    assert query_key("rules", m, 5) != query_key("rules", m, 10)
+    assert query_key("rules", m, 5) == query_key("rules", m.copy(), 5)
+
+
+# ---------------------------------------------------------------------------
+# End to end: mine -> index -> serve round trip on the thesis example
+# ---------------------------------------------------------------------------
+
+
+def test_mine_index_serve_roundtrip(thesis_db):
+    from repro.core import eclat
+
+    dense = np.asarray(thesis_db.dense())
+    minsup = 5
+    oracle = eclat.brute_force_fis(dense, minsup)
+    fi_idx, rule_idx = build_indexes(oracle, thesis_db.n_items,
+                                     thesis_db.n_tx, min_confidence=0.7)
+    engine = QueryEngine(fi_idx, rule_idx, batch=16, top_k=3)
+    # every mined itemset is servable at its exact support
+    sets = list(oracle)[:16]
+    np.testing.assert_array_equal(
+        engine.support(engine.pack(sets)), [oracle[s] for s in sets]
+    )
+    # rules agree with the brute-force generator
+    want = rules_mod.brute_force_rules(oracle, thesis_db.n_tx, 0.7)
+    got = {rule_idx.rule(j).key() for j in range(rule_idx.n_rules)}
+    assert got == set(want)

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# CI gate (also the local pre-push check): tier-1 tests + smoke benchmarks.
+#
+#   tools/check.sh            # everything
+#   tools/check.sh --tests    # tier-1 pytest only
+#   tools/check.sh --bench    # smoke benchmarks only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+run_tests=1
+run_bench=1
+case "${1:-}" in
+  --tests) run_bench=0 ;;
+  --bench) run_tests=0 ;;
+  "") ;;
+  *) echo "usage: tools/check.sh [--tests|--bench]" >&2; exit 2 ;;
+esac
+
+if [[ $run_tests -eq 1 ]]; then
+  echo "== tier-1 tests =="
+  python -m pytest -x -q
+fi
+
+if [[ $run_bench -eq 1 ]]; then
+  echo "== smoke benchmarks (kernels + serve) =="
+  python -m benchmarks.run --smoke
+fi
+
+echo "check.sh: OK"
