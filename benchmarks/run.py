@@ -5,15 +5,16 @@
   replication  → §11.5 Tables 11.15–11.21  (LPT vs DB-Repl-Min)
   kernels      → Eclat support-counting hot spot (B.3.1)
   serve        → batched subset-query serving sweep (DESIGN.md §Serving)
+  stream       → fused delta-update vs full window recompute (§Streaming)
   roofline     → EXPERIMENTS.md §Roofline  (reads results/dryrun/*.json)
 
 ``python -m benchmarks.run [--fast|--full|--smoke] [--only NAME]``.  Prints
 ``name,us_per_call,derived`` CSV lines where applicable.  Defaults to the
 fast variant so the whole suite stays CPU-friendly; ``--smoke`` runs only
-the kernels + serve sections in fast mode (the CI gate, tools/check.sh).
-The kernels and serve sections additionally write ``BENCH_kernels.json`` /
-``BENCH_serve.json`` (shapes, reps, µs) so the perf trajectory is
-machine-readable across PRs.
+the kernels + serve + stream sections in fast mode (the CI gate,
+tools/check.sh).  The kernels, serve, and stream sections additionally
+write ``BENCH_kernels.json`` / ``BENCH_serve.json`` / ``BENCH_stream.json``
+(shapes, reps, µs) so the perf trajectory is machine-readable across PRs.
 """
 from __future__ import annotations
 
@@ -34,10 +35,10 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     fast = not args.full
 
-    sections = ["kernels", "serve", "speedup", "pbec", "replication",
-                "roofline"]
+    sections = ["kernels", "serve", "stream", "speedup", "pbec",
+                "replication", "roofline"]
     if args.smoke:
-        sections = ["kernels", "serve"]
+        sections = ["kernels", "serve", "stream"]
     if args.only:
         sections = [args.only]
 
@@ -52,6 +53,10 @@ def main() -> None:
             from benchmarks import serve
 
             serve.run(fast=fast)
+        elif name == "stream":
+            from benchmarks import stream
+
+            stream.run(fast=fast)
         elif name == "speedup":
             from benchmarks import speedup
 

@@ -1,0 +1,169 @@
+"""Streaming micro-benchmarks: fused delta-update vs full recompute.
+
+The streaming subsystem's claim (DESIGN.md, "Streaming subsystem"): when a
+block arrives and a block expires, updating the F mined supports via the
+fused ``[2, F]`` arrive/expire sweep (``kernels/delta_support.py``) beats
+recomputing all F supports over the whole B-block window — the naive
+per-block cost a stream server would otherwise pay.  The work ratio is
+B/2, so the window length is the speedup lever; measured here per admitted
+block on the IBM bench DB:
+
+  * **delta**     — ONE fused sweep over the arrive+expire pair
+    (``ops.delta_supports``; Pallas on TPU, jnp reference on CPU — on CPU
+    this measures the algorithmic reformulation, as in
+    ``benchmarks/kernels.py``);
+  * **full**      — recompute every FI's support over all B resident blocks
+    (``ops.block_itemset_supports`` on the whole stacked window);
+  * **host numpy**— dense-bool containment over the whole window on host,
+    the conventional implementation both device paths replace.
+
+Results print as CSV lines and land in ``BENCH_stream.json`` (the CI smoke
+gate asserts the delta path's speedup there).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import bitmap as bm  # noqa: E402
+from repro.core import eclat  # noqa: E402
+from repro.data.ibm_gen import IBMParams, drifting_stream  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+from repro.serve.index import FIIndex  # noqa: E402
+from repro.stream import SlidingWindow  # noqa: E402
+
+REPS = 5
+
+
+def _time(f, *args, reps=REPS):
+    jax.block_until_ready(f(*args))  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _host_numpy_window(window_dense: np.ndarray, fi_dense: np.ndarray):
+    """Full-window recompute on host: dense-bool containment counts."""
+    counts = np.zeros(fi_dense.shape[0], np.int64)
+    for f in range(fi_dense.shape[0]):
+        counts[f] = (~(fi_dense[f][None, :] & ~window_dense).any(axis=1)).sum()
+    return counts
+
+
+def run(fast: bool = False, out_path: str = "BENCH_stream.json"):
+    n_blocks = 32                      # window length B -> work ratio B/2
+    block_tx = 32 if fast else 128
+    p = IBMParams(
+        n_tx=n_blocks * block_tx, n_items=48, n_patterns=30,
+        avg_pattern_len=6, avg_tx_len=10, seed=7,
+    )
+
+    # fill a window from the (drift-free) stream and mine it once
+    window = SlidingWindow.empty(n_blocks, block_tx, p.n_items)
+    blocks = []
+    for dense_block, _ in drifting_stream(
+        p, n_blocks=n_blocks + 1, block_tx=block_tx
+    ):
+        packed = np.asarray(bm.pack_bool(jnp.asarray(dense_block)))
+        blocks.append((dense_block, packed))
+        if len(blocks) <= n_blocks:
+            window, _ = window.admit(jnp.asarray(packed))
+    db = window.to_bitmap_db()
+    minsup = int(np.ceil(0.05 * window.n_tx))
+    res = eclat.mine_all(
+        db, minsup,
+        config=eclat.EclatConfig(max_out=1 << 15, max_stack=8192,
+                                 frontier_size=16),
+    )
+    assert int(res.stack_overflow) == 0 and int(res.n_total) == int(res.n_out)
+    fis = {}
+    items = np.asarray(res.items[: int(res.n_out)])
+    supps = np.asarray(res.supports[: int(res.n_out)])
+    for row, s in zip(items, supps):
+        mask = np.asarray(bm.unpack_bool(jnp.asarray(row), p.n_items))
+        fis[frozenset(np.nonzero(mask)[0].tolist())] = int(s)
+    index = FIIndex.from_fi_dict(fis, p.n_items, window.n_tx)
+    F = index.n_fis
+    fi_masks = index.masks[:F]
+    print(f"stream-bench: db={p.name} window={n_blocks}x{block_tx}tx "
+          f"F={F} minsup={minsup}")
+
+    arrive = jnp.asarray(blocks[-1][1])            # the next stream block
+    expire = window.blocks[window.head]            # the one it would evict
+    stacked = window.stacked()
+
+    # delta: one fused [2, F] sweep per admitted block
+    delta_fn = jax.jit(lambda a, e: ops.delta_supports(a, e, fi_masks))
+    us_delta = _time(delta_fn, arrive, expire)
+
+    # full: recompute all F supports over the whole resident window
+    full_fn = jax.jit(
+        lambda w: ops.block_itemset_supports(w, fi_masks).sum(axis=0)
+    )
+    us_full = _time(full_fn, stacked)
+
+    # host numpy over the dense window
+    window_dense = np.asarray(db.dense())
+    fi_dense = np.asarray(bm.unpack_bool(fi_masks, p.n_items))
+    t0 = time.perf_counter()
+    host_counts = _host_numpy_window(window_dense, fi_dense)
+    us_host = (time.perf_counter() - t0) * 1e6
+
+    # correctness cross-check: all three paths agree on window supports
+    np.testing.assert_array_equal(
+        np.asarray(full_fn(stacked)), host_counts
+    )
+    d = np.asarray(delta_fn(arrive, expire))
+    assert d.shape == (2, F)
+
+    speedup = us_full / us_delta
+    entries = [
+        dict(name="stream_delta_update", B=n_blocks, T_blk=block_tx, F=F,
+             us=us_delta),
+        dict(name="stream_full_recompute", B=n_blocks, T_blk=block_tx, F=F,
+             us=us_full, slowdown_vs_delta=speedup),
+        dict(name="stream_host_numpy", B=n_blocks, T_blk=block_tx, F=F,
+             us=us_host, slowdown_vs_delta=us_host / us_delta),
+    ]
+    print(f"stream.delta_update[B={n_blocks},F={F}],{us_delta:.1f},")
+    print(f"stream.full_recompute[B={n_blocks},F={F}],{us_full:.1f},"
+          f"slowdown_vs_delta={speedup:.2f}x")
+    print(f"stream.host_numpy[B={n_blocks},F={F}],{us_host:.1f},"
+          f"slowdown_vs_delta={us_host / us_delta:.2f}x", flush=True)
+
+    payload = {
+        "bench": "stream",
+        "backend": jax.default_backend(),
+        "db": p.name,
+        "window_blocks": n_blocks,
+        "block_tx": block_tx,
+        "n_fis": F,
+        "reps": REPS,
+        "fast": fast,
+        "delta_speedup_vs_full": speedup,
+        "entries": entries,
+    }
+    Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"[wrote {out_path}: {len(entries)} entries, "
+          f"delta {speedup:.1f}x vs full recompute]", flush=True)
+    # the CI gate: the whole subsystem exists for this ratio (work ratio is
+    # B/2 = 16x by construction at B=32, so 10x leaves measurement headroom)
+    assert speedup >= 10.0, (
+        f"delta-update speedup regressed to {speedup:.1f}x (< 10x) — "
+        f"see {out_path} entries"
+    )
+    return entries
+
+
+if __name__ == "__main__":
+    run(fast=("--fast" in sys.argv) or ("--smoke" in sys.argv))

@@ -61,12 +61,22 @@ def params_from_name(name: str, seed: int = 0) -> IBMParams:
     )
 
 
-def generate_dense(params: IBMParams) -> np.ndarray:
-    """Generate a dense bool transaction matrix ``[n_tx, n_items]``."""
-    rng = np.random.default_rng(params.seed)
-    I, P = params.n_items, params.n_patterns
+@dataclasses.dataclass(frozen=True)
+class PatternPool:
+    """The generator's latent state: what counts as a "frequent pattern".
 
-    # -- pattern pool ---------------------------------------------------------
+    Re-drawing the pool while keeping the item universe IS concept drift —
+    the mechanism :func:`drifting_stream` uses to script drift scenarios.
+    """
+
+    patterns: list          # list[np.int64 array] — the potential FIs
+    weights: np.ndarray     # float [P] — normalized pattern popularity
+    corruption: np.ndarray  # float [P] — per-pattern item-drop rate
+
+
+def _draw_pattern_pool(rng: np.random.Generator, params: IBMParams) -> PatternPool:
+    """Draw a fresh pool of potentially-frequent patterns."""
+    I, P = params.n_items, params.n_patterns
     # Pattern lengths ~ Poisson(avg_pattern_len), at least 1, at most n_items.
     plens = np.clip(rng.poisson(params.avg_pattern_len, P), 1, I)
     # Item popularity is skewed (Zipf-ish) as in the original generator.
@@ -97,25 +107,73 @@ def generate_dense(params: IBMParams) -> np.ndarray:
     pw /= pw.sum()
     # Per-pattern corruption level.
     corr = np.clip(rng.normal(params.corruption, 0.1, P), 0.0, 0.95)
+    return PatternPool(patterns=patterns, weights=pw, corruption=corr)
 
-    # -- transactions ---------------------------------------------------------
-    tlens = np.clip(rng.poisson(params.avg_tx_len, params.n_tx), 1, I)
-    dense = np.zeros((params.n_tx, I), dtype=bool)
-    pat_choices = rng.choice(P, size=(params.n_tx, 8), p=pw)
-    for t in range(params.n_tx):
+
+def _emit_transactions(
+    rng: np.random.Generator, params: IBMParams, pool: PatternPool, n_tx: int
+) -> np.ndarray:
+    """Emit ``n_tx`` transactions from a pattern pool: dense bool [n_tx, I]."""
+    I, P = params.n_items, params.n_patterns
+    tlens = np.clip(rng.poisson(params.avg_tx_len, n_tx), 1, I)
+    dense = np.zeros((n_tx, I), dtype=bool)
+    pat_choices = rng.choice(P, size=(n_tx, 8), p=pool.weights)
+    for t in range(n_tx):
         target = int(tlens[t])
         got = 0
         for k in pat_choices[t]:
             if got >= target:
                 break
-            pat = patterns[k]
-            keep = rng.random(len(pat)) >= corr[k]
+            pat = pool.patterns[k]
+            keep = rng.random(len(pat)) >= pool.corruption[k]
             kept = pat[keep]
             dense[t, kept] = True
             got = int(dense[t].sum())
         if got == 0:  # guarantee non-empty transactions
             dense[t, rng.integers(0, I)] = True
     return dense
+
+
+def generate_dense(params: IBMParams) -> np.ndarray:
+    """Generate a dense bool transaction matrix ``[n_tx, n_items]``."""
+    rng = np.random.default_rng(params.seed)
+    pool = _draw_pattern_pool(rng, params)
+    return _emit_transactions(rng, params, pool, params.n_tx)
+
+
+def drifting_stream(
+    params: IBMParams,
+    *,
+    n_blocks: int,
+    block_tx: int,
+    breaks: tuple = (),
+):
+    """Yield a concept-drifting transaction stream, block by block.
+
+    Yields ``(dense_block [block_tx, n_items], segment_id)`` for
+    ``n_blocks`` blocks.  At every block index listed in ``breaks`` the
+    pattern pool is **re-drawn** (fresh patterns, weights, and corruption
+    over the same item universe) — an abrupt concept drift: itemsets
+    frequent under the old pool lose their generating patterns while new
+    co-occurrences appear.  ``segment_id`` counts the pool in force (0 =
+    initial), so drivers and tests can align observed re-mines with
+    scripted drift.
+
+    Deterministic under ``params.seed``: one host RNG drives pool draws and
+    emission in sequence, so the same (params, n_blocks, block_tx, breaks)
+    always replays the same stream.
+    """
+    rng = np.random.default_rng(params.seed)
+    pool = _draw_pattern_pool(rng, params)
+    bset = {int(b) for b in breaks}
+    segment = 0
+    for b in range(n_blocks):
+        if b in bset:
+            # a break at 0 re-draws over the initial pool, as documented —
+            # segment ids then start at 1
+            pool = _draw_pattern_pool(rng, params)
+            segment += 1
+        yield _emit_transactions(rng, params, pool, block_tx), segment
 
 
 def generate(params: IBMParams):

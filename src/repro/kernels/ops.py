@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import bitmap_support as _bs
+from repro.kernels import delta_support as _ds
 from repro.kernels import multi_support as _ms
 from repro.kernels import pair_support as _ps
 from repro.kernels import ref as _ref
@@ -84,6 +85,46 @@ def subset_superset_counts(
             query_masks, fi_masks, interpret=(mode == "interpret")
         )
     return _ref.subset_superset_counts_ref(query_masks, fi_masks)
+
+
+def block_itemset_supports(
+    tx_blocks: jnp.ndarray,
+    fi_masks: jnp.ndarray,
+    *,
+    force: str | None = None,
+) -> jnp.ndarray:
+    """int32[S, F] per-block containment counts of every itemset.
+
+    The streaming update sweep (``repro.stream``): S stacked transaction
+    blocks ``uint32[S, T, IW]`` against F packed itemset masks in one fused
+    launch; force ∈ {None, 'pallas', 'ref', 'interpret'} selects the
+    implementation.
+    """
+    mode = force or ("pallas" if _on_tpu() else "ref")
+    if mode in ("pallas", "interpret"):
+        return _ds.block_itemset_supports_pallas(
+            tx_blocks, fi_masks, interpret=(mode == "interpret")
+        )
+    return _ref.block_itemset_supports_ref(tx_blocks, fi_masks)
+
+
+def delta_supports(
+    arrive: jnp.ndarray,   # uint32[T, IW] — admitted transaction block
+    expire: jnp.ndarray,   # uint32[T, IW] — evicted transaction block
+    fi_masks: jnp.ndarray,  # uint32[F, IW]
+    *,
+    force: str | None = None,
+) -> jnp.ndarray:
+    """int32[2, F] — (arrive counts, expire counts) from ONE fused sweep.
+
+    The window support update is ``supports += counts[0] - counts[1]``;
+    keeping the two contributions separate lets callers also track ingress
+    rates.  Both blocks ride the S axis of :func:`block_itemset_supports`,
+    so the itemset slab streams from HBM once for the pair.
+    """
+    return block_itemset_supports(
+        jnp.stack([arrive, expire]), fi_masks, force=force
+    )
 
 
 def pair_supports(

@@ -57,6 +57,20 @@ def subset_superset_counts_ref(
     )
 
 
+def block_itemset_supports_ref(
+    tx_blocks: jnp.ndarray, fi_masks: jnp.ndarray
+) -> jnp.ndarray:
+    """int32[S, F]: per transaction block, how many rows contain each itemset.
+
+    ``counts[s, f] = Σ_t [fi_masks[f] ⊆ tx_blocks[s, t]]`` — containment is a
+    zero test on the set-difference popcount (``subset_query`` semantics).
+    Oracle of the fused streaming delta kernel ``kernels.delta_support``.
+    """
+    missing = fi_masks[None, None, :, :] & ~tx_blocks[:, :, None, :]
+    contained = bm.popcount_u32(missing).sum(axis=-1) == 0      # [S, T, F]
+    return contained.sum(axis=1).astype(jnp.int32)
+
+
 def multi_extension_supports_mxu_ref(
     item_bits: jnp.ndarray, prefix_tids: jnp.ndarray
 ) -> jnp.ndarray:

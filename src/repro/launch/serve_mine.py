@@ -102,7 +102,10 @@ def replay(stream, engine, cache, batch):
             rows = [(i, m) for i, (k, m) in enumerate(chunk) if k == kind]
             if not rows:
                 continue
-            keys = [query_key(kind, m, engine.top_k) for _, m in rows]
+            # keys carry the swap generation: a hot-swapped index (the
+            # streaming subsystem) can never serve a stale cached hit
+            keys = [query_key(kind, m, engine.top_k, engine.generation)
+                    for _, m in rows]
             results, miss = cache.split_batch(keys)
             if miss:
                 masks = np.stack([rows[j][1] for j in miss])
@@ -178,9 +181,9 @@ def main():
           f"in {time.time() - t0:.2f}s")
 
     # ---- serve --------------------------------------------------------------
-    engine = QueryEngine(fi_index, rule_index, batch=args.batch,
-                         top_k=args.topk)
     cache = QueryCache(capacity=args.cache)
+    engine = QueryEngine(fi_index, rule_index, batch=args.batch,
+                         top_k=args.topk, cache=cache)
     rng = np.random.default_rng(args.seed + 1)
     stream = build_workload(rng, fis, dense, n_items, args.queries,
                             pool=args.pool)
@@ -202,7 +205,11 @@ def main():
           f"p99={np.percentile(lat, 99):.2f} max={lat.max():.2f}")
     s = cache.stats
     print(f"cache: {s.hits}/{s.lookups} hits ({s.hit_rate:.1%}), "
-          f"{s.evictions} evictions, {len(cache)} resident")
+          f"{s.evictions} evictions, {s.invalidations} invalidations, "
+          f"{len(cache)} resident")
+    es = engine.stats()
+    print(f"engine: generation={es['generation']} (index hot-swaps; see "
+          f"repro.launch.stream_mine) F={es['n_fis']} R={es['n_rules']}")
 
     # a taste of the product: the most confident rules overall
     print(f"top-{min(5, rule_index.n_rules)} rules by confidence:")

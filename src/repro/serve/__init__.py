@@ -7,11 +7,13 @@ Turns a mined FI table into a queryable online service (DESIGN.md,
     (packed uint32 itemset masks + metric vectors + per-size offsets);
   * :mod:`repro.serve.engine` — batched query engine: Q queries per
     dispatch over the fused subset/superset Pallas sweep
-    (``repro.kernels.subset_query``);
+    (``repro.kernels.subset_query``); indexes are hot-swappable under
+    traffic (generation counter, used by ``repro.stream``);
   * :mod:`repro.serve.cache`  — LRU query cache keyed on packed query
-    masks, with hit-rate counters.
+    masks, with hit-rate counters and swap invalidation.
 
-End-to-end driver: ``python -m repro.launch.serve_mine``.
+End-to-end drivers: ``python -m repro.launch.serve_mine`` (static) and
+``python -m repro.launch.stream_mine`` (streaming).
 """
 from repro.serve.cache import QueryCache  # noqa: F401
 from repro.serve.engine import QueryEngine  # noqa: F401

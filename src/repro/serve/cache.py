@@ -23,7 +23,13 @@ import numpy as np
 
 
 def query_key(kind: str, packed_row: np.ndarray, *knobs: Hashable) -> Tuple:
-    """Cache key for one query: (kind, knobs..., mask bytes)."""
+    """Cache key for one query: (kind, knobs..., mask bytes).
+
+    When the engine's indexes can be hot-swapped (``repro.stream``), include
+    ``engine.generation`` among the knobs: entries raced in around a swap
+    then key to the dead generation and can never serve stale results, even
+    before :meth:`QueryCache.clear` lands.
+    """
     return (kind, *knobs, np.asarray(packed_row, np.uint32).tobytes())
 
 
@@ -32,6 +38,7 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    invalidations: int = 0    # whole-cache clears (index hot-swaps)
 
     @property
     def lookups(self) -> int:
@@ -46,6 +53,7 @@ class CacheStats:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "invalidations": self.invalidations,
             "hit_rate": self.hit_rate,
         }
 
@@ -72,6 +80,14 @@ class QueryCache:
         self.stats.hits += 1
         self._data.move_to_end(key)
         return self._data[key]
+
+    def clear(self) -> int:
+        """Drop every entry (index hot-swap invalidation); returns the count
+        dropped.  Hit/miss/eviction counters survive — only the data goes."""
+        n = len(self._data)
+        self._data.clear()
+        self.stats.invalidations += 1
+        return n
 
     def put(self, key: Tuple, value: Any) -> None:
         if self.capacity <= 0:

@@ -27,10 +27,16 @@ short result list never fabricates entries.
 :class:`QueryEngine` wraps the functions with a fixed batch width Q: every
 dispatch is padded to Q rows (one compiled program per query type, no
 recompiles mid-serve) — exactly how a production server amortizes traffic.
+
+The engine is also the streaming subsystem's swap point: the index pair
+lives in ONE internal reference (``_state``) that :meth:`~QueryEngine.
+swap_indexes` replaces atomically with a fully built standby pair, bumping a
+``generation`` counter and invalidating the attached query cache — in-flight
+queries read a single snapshot of the state, so they never see a torn
+FI/rule index (DESIGN.md, "Streaming subsystem": hot-swap protocol).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Optional, Tuple
 
@@ -175,25 +181,86 @@ def _lex_smallest_k(key1: jnp.ndarray, key2: jnp.ndarray, k: int):
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
 class QueryEngine:
-    """Serving facade with a fixed dispatch width.
+    """Serving facade with a fixed dispatch width and hot-swappable indexes.
 
     Every call pads its query rows to ``batch`` (shape-stable jit, one
     compiled program per query type for the whole serving session) and
     slices real rows back out.  ``force`` pins the kernel backend the same
     way ``kernels.ops`` does (None = auto: Pallas on TPU, jnp ref on CPU).
+
+    The FI/rule index pair and the swap ``generation`` live in a single
+    tuple reference; each query method snapshots it ONCE, so a concurrent
+    :meth:`swap_indexes` can never pair an old FIIndex with a new RuleIndex
+    mid-query (the torn-index hazard of a naive two-field update).  An
+    optional ``cache`` (:class:`repro.serve.cache.QueryCache`) attached here
+    is invalidated on every swap; cache keys should additionally include
+    :attr:`generation` (see ``query_key``) so a stale hit is structurally
+    impossible even for entries raced in around the swap.
     """
 
-    index: FIIndex
-    rules: Optional[RuleIndex] = None
-    batch: int = 256
-    top_k: int = 5
-    force: Optional[str] = None
+    def __init__(
+        self,
+        index: FIIndex,
+        rules: Optional[RuleIndex] = None,
+        batch: int = 256,
+        top_k: int = 5,
+        force: Optional[str] = None,
+        cache=None,
+    ):
+        self._state: Tuple[FIIndex, Optional[RuleIndex], int] = (
+            index, rules, 0,
+        )
+        self.batch = batch
+        self.top_k = top_k
+        self.force = force
+        self.cache = cache
 
-    def _pad(self, masks: np.ndarray) -> Tuple[jnp.ndarray, int]:
+    # -- swappable state -------------------------------------------------------
+    @property
+    def index(self) -> FIIndex:
+        return self._state[0]
+
+    @property
+    def rules(self) -> Optional[RuleIndex]:
+        return self._state[1]
+
+    @property
+    def generation(self) -> int:
+        """Number of completed index hot-swaps (0 = the launch indexes)."""
+        return self._state[2]
+
+    def swap_indexes(
+        self, index: FIIndex, rules: Optional[RuleIndex] = None
+    ) -> int:
+        """Atomically publish a fully built standby index pair.
+
+        Double-buffered hot-swap: the caller builds the new ``FIIndex`` /
+        ``RuleIndex`` completely off to the side, then this single reference
+        assignment makes them live together; queries already holding the old
+        snapshot finish against consistent old state.  Bumps and returns the
+        generation counter and invalidates the attached cache.
+        """
+        assert index.n_items == self.index.n_items, "item universe changed"
+        self._state = (index, rules, self._state[2] + 1)
+        if self.cache is not None:
+            self.cache.clear()
+        return self._state[2]
+
+    def stats(self) -> dict:
+        index, rules, gen = self._state
+        out = {
+            "generation": gen,
+            "n_fis": index.n_fis,
+            "n_rules": rules.n_rules if rules is not None else 0,
+        }
+        if self.cache is not None:
+            out.update(self.cache.stats.as_dict())
+        return out
+
+    def _pad(self, masks: np.ndarray, index: FIIndex) -> Tuple[jnp.ndarray, int]:
         q = np.asarray(masks, np.uint32)
-        assert q.ndim == 2 and q.shape[1] == self.index.n_words, q.shape
+        assert q.ndim == 2 and q.shape[1] == index.n_words, q.shape
         n = q.shape[0]
         assert n <= self.batch, f"query batch {n} exceeds width {self.batch}"
         return jnp.asarray(_pad_to(q, self.batch)), n
@@ -201,19 +268,21 @@ class QueryEngine:
     # -- typed entry points (packed masks in, numpy out) ---------------------
     def support(self, masks: np.ndarray) -> np.ndarray:
         """int32[n] supports (NOT_FOUND = not frequent / not indexed)."""
-        qp, n = self._pad(masks)
+        index, _, _ = self._state
+        qp, n = self._pad(masks, index)
         sizes = _popcount_rows(qp)
-        out = support_lookup(self.index, qp, sizes, force=self.force)
+        out = support_lookup(index, qp, sizes, force=self.force)
         return np.asarray(out)[:n]
 
     def rules_for(
         self, masks: np.ndarray, *, novel_only: bool = True
     ) -> Tuple[np.ndarray, np.ndarray]:
         """(rule rows [n, k], confidences [n, k]) for basket masks."""
-        assert self.rules is not None, "engine built without a RuleIndex"
-        qp, n = self._pad(masks)
+        index, rules, _ = self._state
+        assert rules is not None, "engine built without a RuleIndex"
+        qp, n = self._pad(masks, index)
         rows, conf = top_rules_for_baskets(
-            self.rules, qp, k=self.top_k, novel_only=novel_only,
+            rules, qp, k=self.top_k, novel_only=novel_only,
             force=self.force,
         )
         return np.asarray(rows)[:n], np.asarray(conf)[:n]
@@ -222,9 +291,10 @@ class QueryEngine:
         self, masks: np.ndarray, *, proper: bool = False
     ) -> Tuple[np.ndarray, np.ndarray]:
         """(FI rows [n, k], supports [n, k]) for itemset masks."""
-        qp, n = self._pad(masks)
+        index, _, _ = self._state
+        qp, n = self._pad(masks, index)
         rows, supp = top_supersets(
-            self.index, qp, k=self.top_k, proper=proper, force=self.force,
+            index, qp, k=self.top_k, proper=proper, force=self.force,
         )
         return np.asarray(rows)[:n], np.asarray(supp)[:n]
 

@@ -1,0 +1,25 @@
+"""Streaming subsystem: sliding-window ingestion with drift-triggered
+re-mining and hot-swapped serving indexes.
+
+Closes the loop between the miner and the query-serving subsystem
+(DESIGN.md, "Streaming subsystem"):
+
+  * :mod:`repro.stream.window`  — device-resident ring buffer of packed
+    transaction blocks, O(1) admit/expire;
+  * :mod:`repro.stream.monitor` — Thm 6.1 sample-based staleness test plus
+    exact border tracking, deciding *when to re-mine*;
+  * :mod:`repro.stream.engine`  — :class:`StreamingMiner`: fused
+    arrive/expire support deltas (``kernels/delta_support.py``), full
+    re-mine on trigger, atomic index hot-swap in the
+    :class:`~repro.serve.engine.QueryEngine`.
+
+End-to-end driver: ``python -m repro.launch.stream_mine``.
+"""
+from repro.stream.engine import (  # noqa: F401
+    AdmitEvent,
+    StreamingMiner,
+    StreamParams,
+    fimi_mine_fn,
+)
+from repro.stream.monitor import DriftMonitor, DriftVerdict  # noqa: F401
+from repro.stream.window import SlidingWindow  # noqa: F401

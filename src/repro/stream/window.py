@@ -1,0 +1,147 @@
+"""Device-resident sliding window of packed transaction blocks.
+
+The stream arrives in fixed-size blocks of ``block_tx`` transactions,
+horizontally packed (``uint32[block_tx, IW]``, layout of
+``core.bitmap.pack_bool``).  The window holds the most recent ``n_blocks``
+blocks in a ring buffer slab ``uint32[B, T_blk, IW]`` that never moves:
+admit writes one slot, expire is implicit (the overwritten slot), both O(1)
+in device work — one ``at[slot].set`` — regardless of window length.
+
+The buffer is a frozen functional structure in the repo's pytree style:
+:meth:`admit` returns ``(new_window, expired_block | None)`` and the caller
+threads the new value (the `StreamingMiner` owns exactly one).  Ring
+position (``head``/``count``) is static host state, like every other static
+shape parameter in this codebase — the device never scans for sentinels.
+
+Support bookkeeping against the window is the delta identity the streaming
+kernel (`kernels/delta_support.py`) exists for::
+
+  supp_W'(f) = supp_W(f) + |{t ∈ arrive : f ⊆ t}| − |{t ∈ expire : f ⊆ t}|
+
+:meth:`rows` / :meth:`to_bitmap_db` materialize the logical window (oldest →
+newest) for full re-mining; the ring order is resolved by a host-side gather
+of block slots, never by copying on admit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+
+_U32 = jnp.uint32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SlidingWindow:
+    """Ring buffer of the last ``n_blocks`` packed transaction blocks.
+
+    Attributes:
+      blocks:   ``uint32[B, T_blk, IW]`` slab; slot contents are valid for
+                the ``count`` logical blocks, others are zero/stale.
+      head:     slot index of the *oldest* resident block (static).
+      count:    number of resident blocks, ≤ B (static).
+      n_items:  |B| of the item universe (static).
+    """
+
+    blocks: jnp.ndarray
+    head: int
+    count: int
+    n_items: int
+
+    def tree_flatten(self):
+        return (self.blocks,), (self.head, self.count, self.n_items)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    # -- constructors ---------------------------------------------------------
+    @classmethod
+    def empty(cls, n_blocks: int, block_tx: int, n_items: int) -> "SlidingWindow":
+        slab = jnp.zeros((n_blocks, block_tx, bm.n_words(n_items)), _U32)
+        return cls(blocks=slab, head=0, count=0, n_items=n_items)
+
+    # -- ring geometry --------------------------------------------------------
+    @property
+    def n_blocks(self) -> int:
+        return int(self.blocks.shape[0])
+
+    @property
+    def block_tx(self) -> int:
+        return int(self.blocks.shape[1])
+
+    @property
+    def n_words(self) -> int:
+        return int(self.blocks.shape[2])
+
+    @property
+    def full(self) -> bool:
+        return self.count == self.n_blocks
+
+    @property
+    def n_tx(self) -> int:
+        """Transactions currently resident (count · block size)."""
+        return self.count * self.block_tx
+
+    def slot_order(self) -> Tuple[int, ...]:
+        """Resident slot indices in logical (oldest → newest) order."""
+        return tuple(
+            (self.head + i) % self.n_blocks for i in range(self.count)
+        )
+
+    # -- admit / expire -------------------------------------------------------
+    def admit(
+        self, block: jnp.ndarray
+    ) -> Tuple["SlidingWindow", Optional[jnp.ndarray]]:
+        """Admit one packed block; O(1) device work.
+
+        Returns ``(window', expired)`` where ``expired`` is the evicted
+        oldest block once the ring is full, else None (warm-up: the window
+        only grows).
+        """
+        block = jnp.asarray(block, _U32)
+        assert block.shape == (self.block_tx, self.n_words), (
+            f"block shape {block.shape} != {(self.block_tx, self.n_words)}"
+        )
+        if not self.full:
+            slot = (self.head + self.count) % self.n_blocks
+            return (
+                dataclasses.replace(
+                    self,
+                    blocks=self.blocks.at[slot].set(block),
+                    count=self.count + 1,
+                ),
+                None,
+            )
+        expired = self.blocks[self.head]
+        return (
+            dataclasses.replace(
+                self,
+                blocks=self.blocks.at[self.head].set(block),
+                head=(self.head + 1) % self.n_blocks,
+            ),
+            expired,
+        )
+
+    # -- materialized views (re-mine path only) -------------------------------
+    def rows(self) -> jnp.ndarray:
+        """``uint32[count·T_blk, IW]`` — resident rows, oldest → newest."""
+        order = jnp.asarray(self.slot_order(), jnp.int32)
+        picked = jnp.take(self.blocks, order, axis=0)
+        return picked.reshape(-1, self.n_words)
+
+    def stacked(self) -> jnp.ndarray:
+        """``uint32[count, T_blk, IW]`` resident blocks — the shape of the
+        fused per-block support sweep (``kernels.ops.block_itemset_supports``),
+        used by the full-recompute oracle in tests and benchmarks."""
+        order = jnp.asarray(self.slot_order(), jnp.int32)
+        return jnp.take(self.blocks, order, axis=0)
+
+    def to_bitmap_db(self) -> bm.BitmapDB:
+        """Full BitmapDB of the current window (the re-mine input)."""
+        return bm.rebuild_vertical(self.rows(), self.n_items, self.n_tx)

@@ -1,0 +1,402 @@
+"""Streaming subsystem: delta kernel parity, ring-buffer invariant, drift
+monitor (Thm 6.1), hot-swap/cache generation, StreamingMiner end to end."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.core import eclat, sampling
+from repro.data.ibm_gen import IBMParams, drifting_stream
+from repro.kernels import delta_support as ds
+from repro.kernels import ops, ref
+from repro.serve import FIIndex, QueryCache, QueryEngine
+from repro.serve.cache import query_key
+from repro.stream import (
+    DriftMonitor,
+    SlidingWindow,
+    StreamingMiner,
+    StreamParams,
+)
+from repro.stream.monitor import chernoff_eps
+
+
+def _pack(dense) -> np.ndarray:
+    return np.asarray(bm.pack_bool(jnp.asarray(dense)))
+
+
+def _random_blocks(s, t, n_items, seed, density=0.3):
+    rng = np.random.default_rng(seed)
+    dense = rng.random((s, t, n_items)) < density
+    return dense, jnp.asarray(_pack(dense))
+
+
+# ---------------------------------------------------------------------------
+# delta_support kernel: interpret-mode parity vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+# ragged (S, T, F, n_items): sub-tile, tile-aligned, prime, multi-word masks
+BLOCK_SHAPES = [
+    (1, 1, 1, 5),
+    (2, 7, 33, 17),
+    (2, 64, 128, 32),
+    (3, 13, 57, 40),
+    (2, 130, 257, 96),
+]
+
+
+@pytest.mark.parametrize("s,t,f,n_items", BLOCK_SHAPES)
+def test_delta_kernel_parity(s, t, f, n_items):
+    txd, txp = _random_blocks(s, t, n_items, seed=s * t + f, density=0.4)
+    fid, fip = _random_blocks(1, f, n_items, seed=f + 1, density=0.15)
+    fid, fip = fid[0], fip[0]
+    # edge cases: the empty itemset and an empty transaction row
+    if f > 2:
+        fid[1] = False
+        fip = jnp.asarray(_pack(fid))
+    if t > 2:
+        txd[0, 1] = False
+        txp = jnp.asarray(_pack(txd))
+    want = ref.block_itemset_supports_ref(txp, fip)
+    got = ds.block_itemset_supports_pallas(txp, fip, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # dense-bool containment semantics
+    contained = ~(fid[None, None, :, :] & ~txd[:, :, None, :]).any(-1)
+    np.testing.assert_array_equal(np.asarray(want), contained.sum(axis=1))
+
+
+@pytest.mark.parametrize("block_f,block_t", [(8, 8), (16, 64), (128, 128)])
+def test_delta_kernel_block_shapes(block_f, block_t):
+    _, txp = _random_blocks(2, 27, 53, seed=1)
+    _, fip = _random_blocks(1, 91, 53, seed=2)
+    want = ref.block_itemset_supports_ref(txp, fip[0])
+    got = ds.block_itemset_supports_pallas(
+        txp, fip[0], block_f=block_f, block_t=block_t, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_delta_ops_dispatch_and_sign():
+    txd, txp = _random_blocks(2, 16, 24, seed=3)
+    _, fip = _random_blocks(1, 9, 24, seed=4, density=0.2)
+    fip = fip[0]
+    a = ops.block_itemset_supports(txp, fip)
+    b = ops.block_itemset_supports(txp, fip, force="interpret")
+    c = ops.block_itemset_supports(txp, fip, force="ref")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    # delta_supports stacks (arrive, expire) on the S axis, in that order
+    d = ops.delta_supports(txp[0], txp[1], fip)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(a))
+
+
+# ---------------------------------------------------------------------------
+# Sliding window ring buffer
+# ---------------------------------------------------------------------------
+
+
+def test_window_admit_expire_ring_order():
+    n_items, T, B = 16, 8, 3
+    dense, packed = _random_blocks(7, T, n_items, seed=5)
+    w = SlidingWindow.empty(B, T, n_items)
+    assert w.count == 0 and not w.full and w.n_tx == 0
+    logical = []   # python model of the window
+    for i in range(7):
+        w, expired = w.admit(packed[i])
+        if len(logical) == B:
+            oldest = logical.pop(0)
+            np.testing.assert_array_equal(np.asarray(expired), oldest)
+        else:
+            assert expired is None
+        logical.append(np.asarray(packed[i]))
+        np.testing.assert_array_equal(
+            np.asarray(w.stacked()), np.stack(logical)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(w.rows()), np.concatenate(logical)
+        )
+    assert w.full and w.n_tx == B * T
+
+
+def test_window_delta_invariant():
+    """Any admit sequence: delta-accumulated supports == full recompute."""
+    n_items, T, B = 20, 32, 4
+    rng = np.random.default_rng(9)
+    _, fi_masks = _random_blocks(1, 11, n_items, seed=6, density=0.2)
+    fi_masks = fi_masks[0]
+    w = SlidingWindow.empty(B, T, n_items)
+    acc = None
+    for i in range(B + 6):
+        dense = rng.random((T, n_items)) < rng.uniform(0.1, 0.5)
+        block = jnp.asarray(_pack(dense))
+        w, expired = w.admit(block)
+        if expired is None:
+            if w.full:   # window just filled: anchor the accumulator once
+                acc = np.asarray(
+                    ops.block_itemset_supports(w.stacked(), fi_masks)
+                ).sum(axis=0)
+            continue
+        assert acc is not None
+        counts = np.asarray(ops.delta_supports(block, expired, fi_masks))
+        acc = acc + counts[0] - counts[1]
+        full = np.asarray(
+            ops.block_itemset_supports(w.stacked(), fi_masks)
+        ).sum(axis=0)
+        np.testing.assert_array_equal(acc, full)
+    assert acc is not None
+
+
+def test_window_to_bitmap_db_roundtrip():
+    n_items, T, B = 12, 16, 2
+    dense, packed = _random_blocks(B, T, n_items, seed=7)
+    w = SlidingWindow.empty(B, T, n_items)
+    for i in range(B):
+        w, _ = w.admit(packed[i])
+    db = w.to_bitmap_db()
+    assert db.n_tx == B * T and db.n_items == n_items
+    np.testing.assert_array_equal(
+        np.asarray(db.dense()), dense.reshape(B * T, n_items)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Drift monitor: Thm 6.1 on a synthetic support step
+# ---------------------------------------------------------------------------
+
+
+def _bernoulli_block(t, n_items, item, p, rng):
+    """Block where `item` appears in exactly round(p·t) rows (plus noise
+    items so masks are non-trivial)."""
+    dense = rng.random((t, n_items)) < 0.05
+    dense[:, item] = False
+    k = int(round(p * t))
+    rows = rng.choice(t, size=k, replace=False)
+    dense[rows, item] = True
+    return _pack(dense)
+
+
+def test_monitor_fires_on_support_step_within_thm61_bound():
+    n_items, T, B = 8, 200, 4
+    eps, delta = 0.2, 0.05
+    mon = DriftMonitor(B, T, eps=eps, delta=delta, seed=0)
+    # the monitor sizes its sample by Thm 6.1 at eps/2
+    assert mon.rows_per_block * B >= sampling.db_sample_size(eps / 2, delta)
+    rng = np.random.default_rng(1)
+    mask = _pack(np.eye(n_items, dtype=bool)[:1])           # itemset {0}
+    p0, p1 = 0.5, 0.9                                       # step > eps
+
+    for _ in range(B):
+        mon.admit(_bernoulli_block(T, n_items, 0, p0, rng))
+    mon.rearm(np.asarray([p0]), minsup_rel=0.1)
+    v = mon.check(jnp.asarray(mask))
+    # fresh table: estimator error ≤ ε/2 w.p. ≥ 1−δ ⇒ no trigger
+    assert not v.fired and v.max_err <= v.threshold
+    assert v.eps_sample <= eps / 2
+
+    for _ in range(B):                                      # window refreshes
+        mon.admit(_bernoulli_block(T, n_items, 0, p1, rng))
+    v = mon.check(jnp.asarray(mask))
+    # true error |p1−p0| = 0.4 > ε ⇒ must fire, and the estimate itself is
+    # within the Thm 6.1 bound of the true stepped support
+    assert v.fired and v.reason == "error"
+    est = mon.estimate_rel_supports(jnp.asarray(mask))[0]
+    assert abs(est - p1) <= v.eps_sample
+
+
+def test_monitor_border_crossing_and_hysteresis():
+    n_items, T, B = 8, 64, 2
+    # eps huge so the sampled error signal cannot fire; border is isolated
+    mon = DriftMonitor(B, T, eps=2.0, delta=0.05, border_margin=0.05,
+                       border_hysteresis=0.02, seed=0)
+    rng = np.random.default_rng(2)
+    for _ in range(B):
+        mon.admit(_bernoulli_block(T, n_items, 0, 0.5, rng))
+    masks = _pack(np.eye(n_items, dtype=bool)[:2])          # {0}, {1}
+    served = np.asarray([0.5, 0.12])
+    mon.rearm(served, minsup_rel=0.1)
+    # {0} far from minsup -> untracked even if it collapses
+    v = mon.check(jnp.asarray(masks), current_rel=np.asarray([0.02, 0.12]))
+    assert not v.fired and v.n_border_crossed == 0
+    # {1} tracked; dips below minsup but within hysteresis -> no fire
+    v = mon.check(jnp.asarray(masks), current_rel=np.asarray([0.5, 0.09]))
+    assert not v.fired
+    # {1} clears minsup − hysteresis -> border fires
+    v = mon.check(jnp.asarray(masks), current_rel=np.asarray([0.5, 0.07]))
+    assert v.fired and v.reason == "border" and v.n_border_crossed == 1
+
+
+def test_chernoff_eps_inverts_sample_size():
+    for eps, delta in [(0.1, 0.05), (0.05, 0.1), (0.02, 0.01)]:
+        n = sampling.db_sample_size(eps, delta)
+        assert chernoff_eps(n, delta) <= eps
+        assert chernoff_eps(n - 1, delta) > eps
+
+
+# ---------------------------------------------------------------------------
+# Hot-swap: cache invalidation + generation counter
+# ---------------------------------------------------------------------------
+
+
+def test_cache_clear_counts_invalidations():
+    c = QueryCache(capacity=4)
+    k = query_key("support", np.asarray([1], np.uint32), 0)
+    c.put(k, "v")
+    assert c.get(k) == "v" and len(c) == 1
+    assert c.clear() == 1
+    assert len(c) == 0 and c.stats.invalidations == 1
+    assert c.get(k) is None          # data gone, counters survive
+    assert c.stats.hits == 1 and c.stats.misses == 1
+
+
+def test_engine_swap_bumps_generation_and_clears_cache(small_db):
+    dense, db, minsup, oracle = small_db
+    cache = QueryCache(capacity=64)
+    idx1 = FIIndex.from_fi_dict(oracle, db.n_items, db.n_tx)
+    # a second index with shifted supports (what a re-mine would publish)
+    idx2 = FIIndex.from_fi_dict(
+        {s: v + 1 for s, v in oracle.items()}, db.n_items, db.n_tx
+    )
+    engine = QueryEngine(idx1, batch=16, top_k=3, cache=cache)
+    assert engine.generation == 0
+
+    some = sorted(oracle, key=lambda s: (len(s), tuple(sorted(s))))[:4]
+    masks = engine.pack(some)
+    keys = [query_key("support", m, engine.top_k, engine.generation)
+            for m in masks]
+    res, miss = cache.split_batch(keys)
+    cache.fill_batch(keys, res, miss, list(engine.support(masks)))
+    assert len(cache) == len(some)
+
+    gen = engine.swap_indexes(idx2)
+    assert gen == 1 and engine.generation == 1
+    assert len(cache) == 0 and cache.stats.invalidations == 1
+    assert engine.index is idx2 and engine.stats()["generation"] == 1
+    # generation-carrying keys make a stale hit structurally impossible:
+    # even a raced-in old entry would live under the dead generation's key
+    keys2 = [query_key("support", m, engine.top_k, engine.generation)
+             for m in masks]
+    assert set(keys).isdisjoint(keys2)
+    res2, miss2 = cache.split_batch(keys2)
+    assert miss2 == list(range(len(some)))   # nothing stale to hit
+    got = engine.support(masks)
+    np.testing.assert_array_equal(got, [oracle[s] + 1 for s in some])
+
+
+def test_engine_swap_rejects_item_universe_change(small_db):
+    dense, db, minsup, oracle = small_db
+    engine = QueryEngine(FIIndex.from_fi_dict(oracle, db.n_items, db.n_tx))
+    bad = FIIndex.from_fi_dict({}, db.n_items + 7, db.n_tx)
+    with pytest.raises(AssertionError):
+        engine.swap_indexes(bad)
+
+
+# ---------------------------------------------------------------------------
+# StreamingMiner end to end on a drifting stream
+# ---------------------------------------------------------------------------
+
+
+def _brute_mine(window, abs_minsup):
+    dense = np.asarray(window.to_bitmap_db().dense())
+    return eclat.brute_force_fis(dense, abs_minsup)
+
+
+@pytest.fixture(scope="module")
+def streamed():
+    p = IBMParams(n_items=20, n_patterns=6, avg_pattern_len=4,
+                  avg_tx_len=7, seed=3)
+    sp = StreamParams(
+        n_blocks=3, block_tx=64, min_support_rel=0.15, min_confidence=0.6,
+        eps=0.12, delta=0.05, border_margin=0.03, border_hysteresis=0.02,
+        cooldown_blocks=1, batch=32, seed=0,
+    )
+    sm = StreamingMiner(sp, p.n_items, mine_fn=_brute_mine)
+    events = []
+    stale_after_remine = []
+    parity_checks = 0
+    for block, segment in drifting_stream(
+        p, n_blocks=10, block_tx=sp.block_tx, breaks=(5,)
+    ):
+        ev = sm.admit(block)
+        # system-level delta invariant at every step the engine is live
+        if sm.engine is not None and sm.engine.index.n_fis:
+            np.testing.assert_array_equal(
+                sm.exact_window_supports(), sm.current_supports
+            )
+        if ev.remined:
+            stale_after_remine.append(sm.staleness())
+            # torn-index check at the swap point: the freshly published
+            # table must serve the window it was mined from, exactly
+            dense = np.asarray(sm.window.to_bitmap_db().dense())
+            oracle = eclat.brute_force_fis(dense, sm.abs_minsup)
+            assert sm.engine.index.n_fis == len(oracle)
+            sets = sorted(oracle, key=lambda s: (len(s), tuple(sorted(s))))
+            for lo in range(0, len(sets), sm.engine.batch):
+                part = sets[lo: lo + sm.engine.batch]
+                np.testing.assert_array_equal(
+                    sm.engine.support(sm.engine.pack(part)),
+                    [oracle[s] for s in part],
+                )
+            parity_checks += 1
+        events.append((ev, segment))
+    return sm, events, stale_after_remine, parity_checks
+
+
+def test_streaming_miner_initial_mine_and_drift_remine(streamed):
+    sm, events, stale_after_remine, _ = streamed
+    # engine comes up exactly when the window first fills
+    assert all(e.generation == -1 for e, _ in events[:2])
+    assert events[2][0].remined and events[2][0].remine_reason == "initial"
+    # the scripted drift at block 5 causes at least one later re-mine
+    post_drift = [e for e, seg in events if seg == 1 and e.remined]
+    assert len(post_drift) >= 1
+    assert all(e.remine_reason in ("error", "border") for e in post_drift)
+    assert sm.stats.remines == sm.engine.generation + 1
+    # a freshly re-mined table serves the exact window it was mined from
+    assert stale_after_remine and all(s == 0.0 for s in stale_after_remine)
+
+
+def test_streaming_miner_parity_at_every_swap(streamed):
+    """Every swap passed the torn-index check (done in the fixture at the
+    swap point): the published table served its mine-time window exactly,
+    full membership and support values."""
+    sm, _, _, parity_checks = streamed
+    assert parity_checks == sm.stats.remines
+    # between swaps the table is allowed to go stale, but the engine still
+    # answers exactly what its (immutable) index claims — never torn state
+    idx = sm.engine.index
+    rows = np.asarray(idx.masks)[: idx.n_fis][:32]
+    np.testing.assert_array_equal(
+        sm.engine.support(rows), np.asarray(idx.supports)[: idx.n_fis][:32]
+    )
+
+
+def test_streaming_miner_cache_generation_isolation(streamed):
+    sm, _, _, _ = streamed
+    # every hot-swap invalidated the attached cache
+    assert sm.cache.stats.invalidations == sm.engine.generation
+    assert sm.engine.stats()["invalidations"] == sm.engine.generation
+
+
+def test_drifting_stream_deterministic_and_segmented():
+    p = IBMParams(n_items=16, n_patterns=5, avg_pattern_len=3,
+                  avg_tx_len=6, seed=11)
+    a = list(drifting_stream(p, n_blocks=6, block_tx=32, breaks=(2, 4)))
+    b = list(drifting_stream(p, n_blocks=6, block_tx=32, breaks=(2, 4)))
+    assert [s for _, s in a] == [0, 0, 1, 1, 2, 2]
+    for (xa, sa), (xb, sb) in zip(a, b):
+        assert sa == sb
+        np.testing.assert_array_equal(xa, xb)
+    # no-break stream reproduces the flat generator's distribution machinery
+    flat = list(drifting_stream(p, n_blocks=2, block_tx=32))
+    assert [s for _, s in flat] == [0, 0]
+    assert flat[0][0].shape == (32, 16)
+
+
+def test_drifting_stream_break_changes_distribution():
+    p = IBMParams(n_items=24, n_patterns=8, avg_pattern_len=5,
+                  avg_tx_len=8, seed=3)
+    blocks = list(drifting_stream(p, n_blocks=8, block_tx=256, breaks=(4,)))
+    f0 = np.concatenate([b for b, s in blocks if s == 0]).mean(axis=0)
+    f1 = np.concatenate([b for b, s in blocks if s == 1]).mean(axis=0)
+    # the re-drawn pool moves item frequencies by a detectable margin
+    assert np.abs(f0 - f1).max() > 0.05

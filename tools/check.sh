@@ -23,7 +23,7 @@ if [[ $run_tests -eq 1 ]]; then
 fi
 
 if [[ $run_bench -eq 1 ]]; then
-  echo "== smoke benchmarks (kernels + serve) =="
+  echo "== smoke benchmarks (kernels + serve + stream) =="
   python -m benchmarks.run --smoke
 fi
 
