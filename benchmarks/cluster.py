@@ -1,0 +1,158 @@
+"""Distributed-executor benchmarks: speedup curve + rebalancing payoff.
+
+Two claims of the cluster subsystem (DESIGN.md, "Distributed mining"):
+
+  1. **Speedup scales with the mesh** — the sample-planned partition keeps
+     shards busy, so the makespan falls as devices are added.  Measured as
+     the *modeled makespan* Σ_r max_p trips(r, p): DFS trips are the
+     device-independent work unit (``Phase4Out.work_iters``), rounds are
+     barriers, and the model is deterministic — CPU wall-clock of simulated
+     miners would only add noise.  The curve runs P ∈ {1, 2, 4, 8} virtual
+     miners on an IBM-gen DB with ``frontier_size=1`` so one trip = one PBEC
+     node and per-class work is conserved across assignments.
+  2. **Rebalancing beats static LPT when the estimates are wrong** — with a
+     deliberately tiny FI sample the static assignment is skewed; the
+     telemetry-driven donation pass recovers most of the gap at identical
+     round structure (same chunk, donations on vs off).
+
+Results print as CSV lines and land in ``BENCH_cluster.json``; the CI smoke
+gate asserts the speedup curve is monotone 1→4 and that rebalancing is never
+slower than static LPT on the skewed workload.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+from repro import cluster  # noqa: E402
+from repro.core import eclat, fimi  # noqa: E402
+from repro.data.ibm_gen import IBMParams, generate_dense  # noqa: E402
+
+SUPPORT = 0.1
+SEED = 7
+
+
+def _params(*, rebalance: bool, chunk=None, n_fi_sample: int = 512,
+            scheduler: str = "lpt") -> cluster.ClusterParams:
+    return cluster.ClusterParams(
+        planner=cluster.PlannerParams(
+            min_support_rel=SUPPORT,
+            n_db_sample=256,
+            n_fi_sample=n_fi_sample,
+            scheduler=scheduler,
+        ),
+        # frontier_size=1: one while_loop trip = one DFS node, so per-class
+        # cost is assignment-independent and makespans compare cleanly
+        eclat=eclat.EclatConfig(
+            max_out=1 << 14, max_stack=4096, frontier_size=1
+        ),
+        chunk=chunk,
+        rebalance=rebalance,
+    )
+
+
+def _run(dense, n_items, P, params):
+    shards = fimi.shard_db(dense, P)
+    t0 = time.perf_counter()
+    res = cluster.execute(
+        shards, n_items, params, jax.random.PRNGKey(SEED)
+    )
+    return res, time.perf_counter() - t0
+
+
+def run(fast: bool = False, out_path: str = "BENCH_cluster.json"):
+    n_tx = 512 if fast else 1024
+    p = IBMParams(
+        n_tx=n_tx, n_items=32, n_patterns=12, avg_pattern_len=5,
+        avg_tx_len=9, seed=SEED,
+    )
+    dense = generate_dense(p)
+    print(f"cluster-bench: db={p.name} |D|={n_tx} |B|={p.n_items} "
+          f"sup={SUPPORT}")
+
+    # ---- claim 1: speedup-vs-devices curve (well-sampled planner) ---------
+    entries = []
+    base = None
+    speedups = {}
+    for P in (1, 2, 4, 8):
+        res, wall = _run(dense, p.n_items, P, _params(rebalance=True))
+        mk = res.report.makespan_trips
+        if base is None:
+            base = mk
+        speedups[P] = base / max(mk, 1.0)
+        entries.append(dict(
+            name="cluster_speedup", P=P, makespan_trips=mk,
+            speedup=speedups[P], wall_s=wall,
+            imbalance=res.report.imbalance, rounds=res.report.n_rounds,
+            n_fis=res.table.n_fis,
+        ))
+        print(f"cluster.speedup[P={P}],{mk:.0f},speedup={speedups[P]:.2f}x,"
+              f"imbalance={res.report.imbalance:.2f},wall={wall:.2f}s",
+              flush=True)
+
+    # ---- claim 2: static LPT vs +rebalancing on a skewed workload ---------
+    # a tiny FI sample makes the static estimates unreliable → skewed loads;
+    # both runs share the round structure (chunk) so only donations differ
+    P_skew, chunk = 4, 2
+    res_static, _ = _run(
+        dense, p.n_items, P_skew,
+        _params(rebalance=False, chunk=chunk, n_fi_sample=32),
+    )
+    res_rebal, _ = _run(
+        dense, p.n_items, P_skew,
+        _params(rebalance=True, chunk=chunk, n_fi_sample=32),
+    )
+    mk_s = res_static.report.makespan_trips
+    mk_r = res_rebal.report.makespan_trips
+    assert res_static.table.to_dict() == res_rebal.table.to_dict(), \
+        "rebalancing changed the mined FI set"
+    improvement = mk_s / max(mk_r, 1.0)
+    entries.append(dict(
+        name="cluster_static_lpt", P=P_skew, chunk=chunk,
+        makespan_trips=mk_s, imbalance=res_static.report.imbalance,
+    ))
+    entries.append(dict(
+        name="cluster_rebalanced", P=P_skew, chunk=chunk,
+        makespan_trips=mk_r, imbalance=res_rebal.report.imbalance,
+        donations=len(res_rebal.report.donations),
+        improvement_vs_static=improvement,
+    ))
+    print(f"cluster.static_lpt[P={P_skew}],{mk_s:.0f},"
+          f"imbalance={res_static.report.imbalance:.2f}")
+    print(f"cluster.rebalanced[P={P_skew}],{mk_r:.0f},"
+          f"improvement={improvement:.2f}x,"
+          f"donations={len(res_rebal.report.donations)}", flush=True)
+
+    payload = {
+        "bench": "cluster",
+        "backend": jax.default_backend(),
+        "db": p.name,
+        "support": SUPPORT,
+        "fast": fast,
+        "speedup_1_to_4": speedups[4],
+        "rebalance_improvement": improvement,
+        "entries": entries,
+    }
+    Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"[wrote {out_path}: {len(entries)} entries, "
+          f"speedup@4={speedups[4]:.2f}x, rebalance {improvement:.2f}x "
+          f"vs static]", flush=True)
+
+    # the CI gate (acceptance criteria of the subsystem)
+    assert speedups[2] > speedups[1] and speedups[4] > speedups[2], (
+        f"speedup not monotone 1→4: {speedups}"
+    )
+    assert mk_r <= mk_s, (
+        f"rebalancing slower than static LPT: {mk_r:.0f} > {mk_s:.0f} trips"
+    )
+    return entries
+
+
+if __name__ == "__main__":
+    run(fast=("--fast" in sys.argv) or ("--smoke" in sys.argv))

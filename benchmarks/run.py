@@ -6,15 +6,18 @@
   kernels      → Eclat support-counting hot spot (B.3.1)
   serve        → batched subset-query serving sweep (DESIGN.md §Serving)
   stream       → fused delta-update vs full window recompute (§Streaming)
+  cluster      → distributed-executor speedup curve + rebalancing payoff
+                 (§Distributed mining)
   roofline     → EXPERIMENTS.md §Roofline  (reads results/dryrun/*.json)
 
 ``python -m benchmarks.run [--fast|--full|--smoke] [--only NAME]``.  Prints
 ``name,us_per_call,derived`` CSV lines where applicable.  Defaults to the
 fast variant so the whole suite stays CPU-friendly; ``--smoke`` runs only
-the kernels + serve + stream sections in fast mode (the CI gate,
-tools/check.sh).  The kernels, serve, and stream sections additionally
-write ``BENCH_kernels.json`` / ``BENCH_serve.json`` / ``BENCH_stream.json``
-(shapes, reps, µs) so the perf trajectory is machine-readable across PRs.
+the kernels + serve + stream + cluster sections in fast mode (the CI gate,
+tools/check.sh).  The kernels, serve, stream, and cluster sections
+additionally write ``BENCH_kernels.json`` / ``BENCH_serve.json`` /
+``BENCH_stream.json`` / ``BENCH_cluster.json`` (shapes, reps, µs) so the
+perf trajectory is machine-readable across PRs.
 """
 from __future__ import annotations
 
@@ -35,10 +38,10 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     fast = not args.full
 
-    sections = ["kernels", "serve", "stream", "speedup", "pbec",
+    sections = ["kernels", "serve", "stream", "cluster", "speedup", "pbec",
                 "replication", "roofline"]
     if args.smoke:
-        sections = ["kernels", "serve", "stream"]
+        sections = ["kernels", "serve", "stream", "cluster"]
     if args.only:
         sections = [args.only]
 
@@ -57,6 +60,10 @@ def main() -> None:
             from benchmarks import stream
 
             stream.run(fast=fast)
+        elif name == "cluster":
+            from benchmarks import cluster
+
+            cluster.run(fast=fast)
         elif name == "speedup":
             from benchmarks import speedup
 

@@ -1,0 +1,439 @@
+"""Distributed mining executor: Phase-3 exchange + Phase-4 shard_map mining.
+
+Takes a packed transaction DB sharded over a 1-D miner mesh and runs the full
+paper pipeline end to end::
+
+    plan (host, sample-based)                                  planner.py
+      └─► per-shard class queues
+    round r = 0, 1, …                                          this module
+      ├─ Phase 3: all_to_all exchange of the transactions the
+      │           round's classes need (fixed-capacity slabs)  core/phases.py
+      ├─ Phase 4: frontier-batched Eclat per shard under
+      │           jax.shard_map / vmap, multi_support kernels  core/eclat.py
+      └─ rebalance: telemetry-driven donation of queued PBEC
+                    subtrees between shard queues              rebalance.py
+    merge: all shards' FI buffers + frequent ancestors ──► one FITable
+
+Every device buffer is **static-shape**: the per-round class table is padded
+to ``P·chunk`` rows and the seed slabs to ``[P, chunk, I]``, so each phase
+compiles exactly once and rounds replay the same executables (DESIGN.md,
+"Distributed mining").  Donating a class re-runs the Phase-3 exchange for the
+round that mines it, so ownership changes never mine a stale slab — results
+stay bit-exact w.r.t. single-device ``fimi.run`` regardless of how many
+donations the rebalancer makes.
+
+The SPMD combinator is pluggable exactly as in ``core.fimi``: ``vmap`` for
+P virtual miners on one device, ``shard_map`` over a real miner mesh when
+enough devices exist (``launch/cluster_mine.py`` forks host devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmap as bm
+from repro.core import eclat, fimi, phases
+from repro.cluster import planner as planner_mod
+from repro.cluster import rebalance as rebalance_mod
+
+AXIS = fimi.AXIS  # the miner mesh axis name ("miners")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterParams:
+    """Executor knobs on top of the planner's."""
+
+    planner: planner_mod.PlannerParams = planner_mod.PlannerParams()
+    eclat: eclat.EclatConfig = eclat.EclatConfig(
+        max_out=1 << 14, max_stack=4096, frontier_size=16
+    )
+    exchange_capacity: Optional[int] = None  # Phase-3 per-(src,dst) row cap
+    chunk: Optional[int] = None     # classes per shard per round (None: auto)
+    rebalance: bool = True          # telemetry-driven queue donation
+    skew_threshold: float = 1.25    # rebalance when max/mean exceeds this
+    max_donations: int = 8          # bounded moves per inter-round pass
+    max_rounds: int = 128           # hard bound on mining rounds
+    target_rounds: int = 4          # auto-chunk aims for this many rounds
+    use_mxu: bool = False           # MXU unpack-dot multi-support kernel
+    force: Optional[str] = None     # kernel backend pin (kernels.ops)
+    strict: bool = True             # raise on any overflow (exactness guard)
+
+
+@dataclasses.dataclass(frozen=True)
+class FITable:
+    """The merged global mining result — one table, every shard's FIs.
+
+    Supports are **bit-exact** full-database counts: Phase 4 mines each class
+    on the slab of all transactions containing its prefix, which preserves
+    the support of every itemset in the class (thesis Prop. 8.1).
+    """
+
+    masks: np.ndarray       # uint32 [F, IW] packed itemset masks
+    supports: np.ndarray    # int64 [F]
+    n_items: int
+    n_tx: int
+
+    @property
+    def n_fis(self) -> int:
+        return int(self.masks.shape[0])
+
+    def to_dict(self) -> Dict[frozenset, int]:
+        """Materialize as {frozenset(items): support} (tests / serving glue)."""
+        out: Dict[frozenset, int] = {}
+        if self.n_fis == 0:
+            return out
+        dense = np.asarray(
+            bm.unpack_bool(jnp.asarray(self.masks), self.n_items)
+        ).reshape(self.n_fis, self.n_items)
+        for row, s in zip(dense, self.supports):
+            out[frozenset(np.nonzero(row)[0].tolist())] = int(s)
+        assert len(out) == self.n_fis, "duplicate itemsets in merged FITable"
+        return out
+
+
+@dataclasses.dataclass
+class RoundStats:
+    """Telemetry of one mining round (driver- and benchmark-observable)."""
+
+    round_index: int
+    classes_mined: List[int]        # per shard
+    work_iters: np.ndarray          # int [P] — DFS trips (the load metric)
+    est_mined: np.ndarray           # float [P] — planner units mined
+    replication: float              # Phase-3 Σ|D'_i| / |D| for this round
+    donations: List[rebalance_mod.Donation]
+
+
+@dataclasses.dataclass
+class ClusterReport:
+    """What the executor observed, for the driver/benchmark to print."""
+
+    P: int
+    backend: str                    # "shard_map" | "vmap"
+    rounds: List[RoundStats]
+    phase_ms: Dict[str, float]      # plan / exchange / mine / merge
+    est_loads: np.ndarray           # float [P] — planner prediction
+    observed_loads: np.ndarray      # float [P] — cumulative DFS trips
+    donations: List[rebalance_mod.Donation]
+    exchange_overflow: int
+    mine_overflow: int
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean of observed per-shard load (1.0 = perfect)."""
+        mean = float(self.observed_loads.mean())
+        return float(self.observed_loads.max()) / mean if mean > 0 else 1.0
+
+    @property
+    def makespan_trips(self) -> float:
+        """Modeled makespan: Σ_r max_p trips(r, p) — rounds are barriers."""
+        return float(
+            sum(float(np.max(r.work_iters)) for r in self.rounds)
+        )
+
+    def estimation_error(self) -> float:
+        """Relative error between predicted and observed load *shares*.
+
+        ``max_p |est_share_p − obs_share_p|`` — the planner is judged on the
+        distribution it balanced, not on absolute trip counts (estimates are
+        in sample-FI units, observations in DFS trips).
+        """
+        est, obs = self.est_loads.astype(float), self.observed_loads.astype(float)
+        if est.sum() <= 0 or obs.sum() <= 0:
+            return 0.0
+        return float(np.abs(est / est.sum() - obs / obs.sum()).max())
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    table: FITable
+    plan: planner_mod.MiningPlan
+    report: ClusterReport
+
+
+def _auto_spmd(P: int, spmd, mesh):
+    """Resolve the SPMD combinator: real devices when available, else vmap."""
+    if spmd is not None:
+        return spmd, mesh, ("shard_map" if spmd is fimi.shard_map_spmd else "vmap")
+    if len(jax.devices()) >= P:
+        from repro.launch.mesh import make_miner_mesh
+
+        return fimi.shard_map_spmd, make_miner_mesh(P), "shard_map"
+    return fimi.vmap_spmd, None, "vmap"
+
+
+def execute(
+    tx_shards: jnp.ndarray,   # uint32[P, T, IW] — horizontal packed D_i shards
+    n_items: int,
+    params: ClusterParams,
+    key: jax.Array,
+    *,
+    spmd=None,
+    mesh=None,
+    plan: Optional[planner_mod.MiningPlan] = None,
+) -> ClusterResult:
+    """Run the full distributed pipeline; returns table + plan + telemetry."""
+    P, T, IW = tx_shards.shape
+    spmd, mesh, backend = _auto_spmd(P, spmd, mesh)
+    phase_ms = {"plan": 0.0, "exchange": 0.0, "mine": 0.0, "merge": 0.0}
+
+    t0 = time.perf_counter()
+    if plan is None:
+        plan = planner_mod.plan(
+            tx_shards,
+            n_items,
+            dataclasses.replace(params.planner),
+            key,
+        )
+    phase_ms["plan"] = (time.perf_counter() - t0) * 1e3
+    classes = plan.classes
+    est_sizes = plan.est_sizes
+    queues = plan.shard_queues()
+
+    maxlen = max((len(q) for q in queues), default=0)
+    if params.chunk is not None:
+        chunk = max(1, params.chunk)
+    elif params.rebalance and maxlen > 1:
+        chunk = max(1, -(-maxlen // max(params.target_rounds, 1)))
+    else:
+        chunk = max(1, maxlen)
+    assert chunk <= params.eclat.max_stack, "chunk exceeds miner stack capacity"
+
+    # one-time device constants / mapped phase programs
+    cap = params.exchange_capacity or T
+    local_valid = jnp.ones((P, T), jnp.bool_)
+    minsup_b = jnp.broadcast_to(jnp.asarray(plan.abs_minsup, jnp.int32), (P,))
+    A = plan.ancestor_masks.shape[0]
+    anc_b = jnp.broadcast_to(
+        jnp.asarray(plan.ancestor_masks), (P, A, n_items)
+    )
+    # one partial per execute(): it is a static jit arg of mine_seeded, so a
+    # stable identity keeps all rounds on the same compiled executable
+    from repro.kernels import ops
+
+    multi_support_fn = partial(
+        ops.multi_extension_supports,
+        use_mxu=params.use_mxu,
+        force=params.force,
+    )
+    p3 = spmd(
+        partial(phases.phase3_exchange, axis_name=AXIS, capacity=cap), P, mesh
+    )
+    p4 = spmd(
+        partial(
+            phases.phase4_mine,
+            axis_name=AXIS,
+            n_items=n_items,
+            eclat_cfg=params.eclat,
+            multi_support_fn=multi_support_fn,
+        ),
+        P,
+        mesh,
+    )
+
+    C_round = P * chunk  # padded class-table width, static across rounds
+    ledger = rebalance_mod.LoadLedger(P)
+    rounds: List[RoundStats] = []
+    donations: List[rebalance_mod.Donation] = []
+    fi_masks: List[np.ndarray] = []
+    fi_supports: List[np.ndarray] = []
+    exchange_overflow = 0
+    mine_overflow = 0
+    anc_supports: Optional[np.ndarray] = None
+
+    r = 0
+    while any(queues) and r < params.max_rounds:
+        take = [q[:chunk] for q in queues]
+        queues = [q[chunk:] for q in queues]
+
+        # ---- padded static class table for this round's exchange ----------
+        round_ids = [cid for ids in take for cid in ids]
+        prefix_rows = np.zeros((C_round, n_items), dtype=bool)
+        class_valid = np.zeros((C_round,), dtype=bool)
+        class_assign = np.zeros((C_round,), dtype=np.int32)
+        k = 0
+        for p, ids in enumerate(take):
+            for cid in ids:
+                prefix_rows[k] = classes[cid].prefix
+                class_valid[k] = True
+                class_assign[k] = p
+                k += 1
+        prefix_packed = np.asarray(bm.pack_bool(jnp.asarray(prefix_rows)))
+
+        t0 = time.perf_counter()
+        out3 = p3(
+            tx_shards,
+            local_valid,
+            jnp.broadcast_to(
+                jnp.asarray(prefix_packed), (P, C_round, prefix_packed.shape[-1])
+            ),
+            jnp.broadcast_to(jnp.asarray(class_valid), (P, C_round)),
+            jnp.broadcast_to(jnp.asarray(class_assign), (P, C_round)),
+        )
+        out3 = jax.block_until_ready(out3)
+        phase_ms["exchange"] += (time.perf_counter() - t0) * 1e3
+
+        # ---- Phase 4: mine this round's classes on the received slabs -----
+        seed_prefix, seed_ext, seed_valid = planner_mod.pack_seeds(
+            classes, take, n_items, chunk
+        )
+        keys4 = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            r * P + jnp.arange(P)
+        )
+        t0 = time.perf_counter()
+        out4 = p4(
+            out3.slab.reshape(P, -1, IW),
+            out3.slab_valid.reshape(P, -1),
+            tx_shards,
+            local_valid,
+            jnp.asarray(seed_prefix),
+            jnp.asarray(seed_ext),
+            jnp.asarray(seed_valid),
+            anc_b,
+            minsup_b,
+            keys4,
+        )
+        out4 = jax.device_get(out4)
+        phase_ms["mine"] += (time.perf_counter() - t0) * 1e3
+
+        exchange_overflow += int(np.asarray(out3.overflow).reshape(-1)[0])
+        counts = np.asarray(out4.fi_count).reshape(P)
+        totals = np.asarray(out4.fi_total).reshape(P)
+        mine_overflow += int((totals - counts).sum()) + int(
+            np.asarray(out4.overflow).sum()
+        )
+        items = np.asarray(out4.fi_items).reshape(P, -1, IW)
+        supps = np.asarray(out4.fi_supports).reshape(P, -1)
+        for p in range(P):
+            n = int(counts[p])
+            if n:
+                fi_masks.append(items[p, :n])
+                fi_supports.append(supps[p, :n])
+        anc_supports = np.asarray(out4.prefix_supports).reshape(P, -1)[0]
+
+        trips = np.asarray(out4.work_iters).reshape(P).astype(np.float64)
+        est_mined = np.array(
+            [sum(max(float(est_sizes[c]), 1.0) for c in ids) for ids in take]
+        )
+        ledger.record_round(trips, est_mined)
+
+        moved: List[rebalance_mod.Donation] = []
+        if params.rebalance and any(queues):
+            moved = rebalance_mod.rebalance(
+                queues,
+                est_sizes,
+                ledger,
+                round_index=r,
+                skew_threshold=params.skew_threshold,
+                max_donations=params.max_donations,
+            )
+            donations.extend(moved)
+        rounds.append(
+            RoundStats(
+                round_index=r,
+                classes_mined=[len(ids) for ids in take],
+                work_iters=trips.astype(np.int64),
+                est_mined=est_mined,
+                replication=float(np.asarray(out3.replication).reshape(-1)[0]),
+                donations=moved,
+            )
+        )
+        r += 1
+    assert not any(queues), "max_rounds exhausted with classes still queued"
+
+    if params.strict and (exchange_overflow or mine_overflow):
+        raise RuntimeError(
+            f"cluster executor overflow (exchange={exchange_overflow}, "
+            f"mine={mine_overflow}): raise exchange_capacity / eclat.max_out "
+            f"/ eclat.max_stack — the result would not be exact"
+        )
+
+    # ---- merge: one global table = all shards' FIs + frequent ancestors ---
+    t0 = time.perf_counter()
+    if anc_supports is None:  # no classes at all ⇒ still need prefix supports
+        anc_supports = np.zeros((A,), np.int64)
+    n_anc = plan.n_ancestors
+    anc_keep = np.zeros((A,), bool)
+    anc_keep[:n_anc] = anc_supports[:n_anc] >= plan.abs_minsup
+    if anc_keep.any():
+        fi_masks.append(
+            np.asarray(bm.pack_bool(jnp.asarray(plan.ancestor_masks[anc_keep])))
+        )
+        fi_supports.append(anc_supports[anc_keep])
+    if fi_masks:
+        masks = np.concatenate(fi_masks, axis=0).astype(np.uint32)
+        supports = np.concatenate(fi_supports, axis=0).astype(np.int64)
+    else:
+        masks = np.zeros((0, bm.n_words(n_items)), np.uint32)
+        supports = np.zeros((0,), np.int64)
+    table = FITable(
+        masks=masks, supports=supports, n_items=n_items, n_tx=plan.n_tx
+    )
+    phase_ms["merge"] = (time.perf_counter() - t0) * 1e3
+
+    report = ClusterReport(
+        P=P,
+        backend=backend,
+        rounds=rounds,
+        phase_ms=phase_ms,
+        est_loads=plan.est_loads,
+        observed_loads=ledger.observed.copy(),
+        donations=donations,
+        exchange_overflow=exchange_overflow,
+        mine_overflow=mine_overflow,
+    )
+    return ClusterResult(table=table, plan=plan, report=report)
+
+
+# ---------------------------------------------------------------------------
+# StreamingMiner integration — the distributed re-miner
+# ---------------------------------------------------------------------------
+
+
+def cluster_mine_fn(
+    P: int = 4,
+    cluster_params: Optional[ClusterParams] = None,
+    seed: int = 0,
+) -> Callable:
+    """A ``StreamingMiner.mine_fn`` that re-mines the window distributed.
+
+    Shards the materialized window row-wise over the P miners and runs the
+    full planner → exchange → shard-mine → rebalance pipeline; drift-triggered
+    re-mines then scale with the mesh instead of a single device.
+    ``cluster_params`` overrides everything except ``min_support_rel``, which
+    is always derived from the trigger's absolute minsup.
+    """
+
+    def mine(window, abs_minsup: int) -> Dict[frozenset, int]:
+        n_tx = window.n_tx
+        assert n_tx % P == 0, f"window size {n_tx} not divisible by P={P}"
+        shards = window.rows().reshape(P, n_tx // P, window.n_words)
+        base = cluster_params or ClusterParams(
+            planner=planner_mod.PlannerParams(
+                n_db_sample=min(1024, n_tx), n_fi_sample=512
+            )
+        )
+        # (abs−0.5)/n_tx survives the float round-trip: the planner's
+        # ceil(rel·n_tx) lands exactly on abs_minsup, whereas abs/n_tx can
+        # ceil to abs+1 and silently drop itemsets at exactly abs_minsup
+        params = dataclasses.replace(
+            base,
+            planner=dataclasses.replace(
+                base.planner, min_support_rel=(abs_minsup - 0.5) / n_tx
+            ),
+        )
+        res = execute(
+            shards, window.n_items, params, jax.random.PRNGKey(seed)
+        )
+        return res.table.to_dict()
+
+    return mine

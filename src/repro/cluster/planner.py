@@ -1,0 +1,242 @@
+"""Phase-1/2 control plane of the distributed mining executor.
+
+The paper's headline mechanism: estimate the size of every candidate
+equivalence class from a **database sample** (Thm 6.1 sizes the sample, a
+reservoir over the sample's FI stream sizes the itemset sample), then assign
+classes to mesh shards *before* any distributed work starts.  The planner is
+pure host-side control plane — it runs once per job on replicated inputs and
+its output (:class:`MiningPlan`) is broadcast, exactly how a production
+launcher treats a scheduler.
+
+Pipeline (reusing ``core.sampling`` / ``core.pbec`` / ``core.schedule``)::
+
+    D ── i.i.d. sample (Thm 6.1) ──► D̃ ── Eclat + in-loop reservoir ──► F̃s
+      ── Partition (Alg. 15/17) ──► PBECs ── est. sizes ──► LPT ⊕ DB-Repl-Min
+      ── volume comparison ──► assignment + per-shard queues
+
+Scheduler choice is data-driven: ``scheduler="auto"`` computes both the LPT
+and the DB-Repl-Min assignment, prices each by its **exact replicated
+transaction volume** on the sample (``schedule.replicated_volume`` — the new
+DB-Repl-Min report), and keeps the replication-aware one only when it moves
+strictly fewer transactions without blowing the makespan up.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmap as bm
+from repro.core import eclat, pbec, phases, sampling, schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerParams:
+    """Knobs of the sample-based planning stage (thesis Ch. 6 + Ch. 8)."""
+
+    min_support_rel: float = 0.1
+    eps_db: float = 0.05                # ε of the Thm 6.1 database sample
+    delta_db: float = 0.1
+    eps_fs: float = 0.05                # ε of the Thm 6.3 reservoir sample
+    delta_fs: float = 0.1
+    rho: float = 0.01
+    alpha: float = 0.5                  # Phase-2 split granularity
+    n_db_sample: Optional[int] = None   # override |D̃|
+    n_fi_sample: Optional[int] = None   # override |F̃s|
+    scheduler: str = "auto"             # "lpt" | "repl_min" | "auto"
+    makespan_slack: float = 1.5         # auto: repl_min may cost ≤ slack × LPT
+    max_classes: int = 512
+    sample_eclat: eclat.EclatConfig = eclat.EclatConfig(
+        max_out=1, max_stack=4096, frontier_size=16, count_only=True
+    )
+
+
+@dataclasses.dataclass
+class MiningPlan:
+    """Everything the executor needs, plus what the planner learned.
+
+    The plan is deterministic in (inputs, key): the sample, the reservoir,
+    the partition, and both schedules derive from one host RNG seeded off the
+    key — every host computes the same plan from the same broadcast sample.
+    """
+
+    n_items: int
+    n_tx: int
+    P: int
+    abs_minsup: int
+    classes: List[pbec.PBEC]
+    est_sizes: np.ndarray           # float [C] — sample counts per class
+    assignment: np.ndarray          # int [C] — class → shard
+    est_loads: np.ndarray           # float [P]
+    scheduler_used: str             # "lpt" | "repl_min"
+    lpt_volume: float               # replicated tx volume of the LPT schedule
+    repl_volume: float              # … and of the DB-Repl-Min schedule
+    sample_masks: np.ndarray        # bool [N, I] — F̃s (|W| ≥ 2)
+    ancestor_masks: np.ndarray      # bool [A, I] — prefix side channel
+    n_ancestors: int                # valid rows of ancestor_masks
+    n_db_sample: int                # |D̃| actually drawn
+    n_fi_sample: int                # reservoir capacity
+    sample_item_rel: np.ndarray     # float [I] — item supports on D̃ (relative)
+    eps_db_effective: float         # Thm 6.1 ε implied by |D̃| at delta_db
+
+    def shard_queues(self) -> List[List[int]]:
+        """Per-shard class queues, heaviest estimated class first.
+
+        The executor drains these front-to-front each round; the rebalancer
+        moves tail entries between them.
+        """
+        queues: List[List[int]] = [[] for _ in range(self.P)]
+        order = np.argsort(-self.est_sizes, kind="stable")
+        for cid in order:
+            queues[int(self.assignment[cid])].append(int(cid))
+        return queues
+
+
+def plan(
+    tx_shards: jnp.ndarray,   # uint32[P, T, IW] — horizontal packed shards
+    n_items: int,
+    params: PlannerParams,
+    key: jax.Array,
+) -> MiningPlan:
+    """Build the mining plan from a database sample (Phases 1–2)."""
+    P, T, IW = tx_shards.shape
+    n_tx = P * T
+    abs_minsup = int(np.ceil(params.min_support_rel * n_tx))
+
+    # ---- Phase 1a: database sample (Thm 6.1) -------------------------------
+    n_db = params.n_db_sample or sampling.db_sample_size(
+        params.eps_db, params.delta_db
+    )
+    n_db = min(n_db, n_tx)
+    all_tx = tx_shards.reshape(n_tx, IW)
+    k_samp, k_mine = jax.random.split(key)
+    rows = bm.sample_transactions(all_tx, k_samp, n_db, n_tx)
+    sample_bitdb = bm.rebuild_vertical(rows, n_items, n_db)
+    sample_minsup = int(np.ceil(params.min_support_rel * n_db))
+    eps_eff = math.sqrt(math.log(2.0 / params.delta_db) / (2.0 * n_db))
+
+    # ---- Phase 1b: FI sample — Eclat over D̃ with the in-loop reservoir ----
+    n_fs = params.n_fi_sample or sampling.reservoir_sample_size(
+        params.eps_fs, params.delta_fs, params.rho
+    )
+    res = eclat.mine_all(
+        sample_bitdb,
+        sample_minsup,
+        k_mine,
+        config=dataclasses.replace(
+            params.sample_eclat, reservoir_size=n_fs, count_only=True
+        ),
+    )
+    n_stream = int(res.n_total)
+    res_rows = np.asarray(res.reservoir_items)[: min(n_stream, n_fs)]
+    sample_masks = np.asarray(
+        bm.unpack_bool(jnp.asarray(res_rows), n_items)
+    ).reshape(-1, n_items)
+    # the partitioner's sample space is F̃_{≥2}: singletons are exactly the
+    # 1-prefixes, handled by the prefix side channel (Prop. 2.23's {V} term)
+    sample_masks = sample_masks[sample_masks.sum(axis=1) >= 2]
+
+    # ---- Phase 2: Partition + schedule -------------------------------------
+    def ext_supports(prefix: np.ndarray) -> np.ndarray:
+        tid = bm.tidlist_of_itemset(sample_bitdb, jnp.asarray(prefix))
+        return np.asarray(bm.extension_supports(sample_bitdb.item_bits, tid))
+
+    classes = pbec.partition(
+        sample_masks,
+        P,
+        params.alpha,
+        ext_supports,
+        n_items,
+        max_classes=params.max_classes,
+    )
+    est_sizes = np.array([c.est_count for c in classes], dtype=np.float64)
+
+    tids = np.asarray(
+        phases.seed_tidlists(
+            sample_bitdb.item_bits,
+            jnp.asarray(np.stack([c.prefix for c in classes])),
+            sample_bitdb.all_tids(),
+        )
+    )
+    if params.scheduler not in ("lpt", "repl_min", "auto"):
+        raise ValueError(f"unknown scheduler {params.scheduler!r}")
+    lpt_assign = schedule.lpt_schedule(est_sizes, P)
+    lpt_volume = schedule.replicated_volume(tids, lpt_assign, P)
+    if params.scheduler == "lpt":
+        # skip the O(C²) profit matrix + greedy QKP the choice would discard
+        repl_volume = float("nan")
+        assignment, used = lpt_assign, "lpt"
+    else:
+        profit = schedule.pairwise_shared_transactions(tids)
+        repl = schedule.db_repl_min(est_sizes, profit, P, tidlists=tids)
+        repl_volume = repl.volume
+        if params.scheduler == "repl_min":
+            assignment, used = repl.assignment, "repl_min"
+        else:  # "auto": replication-aware only if it moves strictly less data
+            mk_lpt = schedule.makespan_of(est_sizes, lpt_assign, P)
+            mk_rep = schedule.makespan_of(est_sizes, repl.assignment, P)
+            take_repl = repl.volume < lpt_volume and (
+                mk_rep <= params.makespan_slack * max(mk_lpt, 1.0)
+            )
+            assignment, used = (
+                (repl.assignment, "repl_min") if take_repl
+                else (lpt_assign, "lpt")
+            )
+    est_loads = schedule.loads_of(est_sizes, assignment, P)
+
+    ancestor_masks, anc_list = pbec.ancestor_closure(classes, n_items)
+    item_rel = (
+        np.asarray(
+            bm.extension_supports(sample_bitdb.item_bits, sample_bitdb.all_tids())
+        ).astype(np.float64)
+        / n_db
+    )
+
+    return MiningPlan(
+        n_items=n_items,
+        n_tx=n_tx,
+        P=P,
+        abs_minsup=abs_minsup,
+        classes=classes,
+        est_sizes=est_sizes,
+        assignment=np.asarray(assignment),
+        est_loads=est_loads,
+        scheduler_used=used,
+        lpt_volume=lpt_volume,
+        repl_volume=repl_volume,
+        sample_masks=sample_masks,
+        ancestor_masks=ancestor_masks,
+        n_ancestors=len(anc_list),
+        n_db_sample=n_db,
+        n_fi_sample=n_fs,
+        sample_item_rel=item_rel,
+        eps_db_effective=eps_eff,
+    )
+
+
+def pack_seeds(
+    classes: List[pbec.PBEC],
+    ids_per_shard: List[List[int]],
+    n_items: int,
+    width: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad per-shard class lists into static ``[P, width, I]`` seed arrays.
+
+    Returns ``(seed_prefix, seed_ext, seed_valid)`` — the Phase-4 inputs.
+    Width is fixed across rounds so the executor compiles each phase once.
+    """
+    P = len(ids_per_shard)
+    seed_prefix = np.zeros((P, width, n_items), dtype=bool)
+    seed_ext = np.zeros((P, width, n_items), dtype=bool)
+    seed_valid = np.zeros((P, width), dtype=bool)
+    for p, ids in enumerate(ids_per_shard):
+        assert len(ids) <= width, "round chunk exceeds seed width"
+        for j, cid in enumerate(ids):
+            seed_prefix[p, j] = classes[cid].prefix
+            seed_ext[p, j] = classes[cid].ext
+            seed_valid[p, j] = True
+    return seed_prefix, seed_ext, seed_valid

@@ -243,7 +243,8 @@ def run(
             )
         )
         profit = schedule.pairwise_shared_transactions(tids)
-        assignment = schedule.db_repl_min(sizes, profit, P)
+        # no tidlists: the volume report (NaN then) is unused here
+        assignment = schedule.db_repl_min(sizes, profit, P).assignment
     else:
         assignment = schedule.lpt_schedule(sizes, P)
     est_loads = schedule.loads_of(sizes, assignment, P)
@@ -277,15 +278,8 @@ def run(
             seed_valid[p, j] = True
 
     # ancestor side channel: every DFS-path prefix of every class, dedup'd
-    anc_set = {}
-    for c in classes:
-        for k in range(1, len(c.seq) + 1):
-            anc_set[frozenset(c.seq[:k])] = True
-    anc_list = sorted(anc_set, key=lambda s: (len(s), tuple(sorted(s))))
-    A = max(len(anc_list), 1)
-    ancestor_masks = np.zeros((A, n_items), dtype=bool)
-    for i, s in enumerate(anc_list):
-        ancestor_masks[i, sorted(s)] = True
+    ancestor_masks, anc_list = pbec.ancestor_closure(classes, n_items)
+    A = ancestor_masks.shape[0]
 
     p4 = partial(
         phases.phase4_mine,

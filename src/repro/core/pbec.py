@@ -158,6 +158,27 @@ def _prefix_closure(seqs):
     return out
 
 
+def ancestor_closure(
+    classes: Sequence[PBEC], n_items: int
+) -> Tuple[np.ndarray, List[frozenset]]:
+    """The prefix side-channel itemsets of a class table (Alg. 19 line 2).
+
+    Every DFS-path prefix of every class, dedup'd and ordered by
+    (size, lexicographic) for determinism.  Returns ``(masks bool [A, I],
+    list of frozensets)`` with A ≥ 1 (a zero row pads the empty case so
+    device shapes stay static).
+    """
+    anc_list = sorted(
+        _prefix_closure([c.seq for c in classes]),
+        key=lambda s: (len(s), tuple(sorted(s))),
+    )
+    A = max(len(anc_list), 1)
+    masks = np.zeros((A, n_items), dtype=bool)
+    for i, s in enumerate(anc_list):
+        masks[i, sorted(s)] = True
+    return masks, anc_list
+
+
 def classes_to_packed(classes: Sequence[PBEC]) -> Tuple[np.ndarray, np.ndarray]:
     """Stack class masks into packed uint32 arrays [C, IW] for device use."""
     prefixes = np.stack([c.prefix for c in classes])

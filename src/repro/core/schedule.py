@@ -7,7 +7,7 @@ assignment (Phase 2) and, beyond the paper, for MoE expert→EP-rank placement
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -51,11 +51,54 @@ def lpt_makespan_bound_ok(sizes: Sequence[float], assignment: np.ndarray, P: int
     return loads.max() <= bound + 1e-9
 
 
+def makespan_of(sizes: Sequence[float], assignment: np.ndarray, P: int) -> float:
+    """Max processor load under an assignment (the schedule's makespan)."""
+    return float(loads_of(sizes, assignment, P).max())
+
+
+def replicated_volume(
+    tidlists: np.ndarray,     # uint32[C, W] packed class tidlists T(U_i)
+    assignment: np.ndarray,   # int[C]
+    n_processors: int,
+) -> float:
+    """Exact replicated-transaction volume of an assignment: Σ_p |D'_p|.
+
+    ``|D'_p| = popcount(OR of T(U_i) over classes i on p)`` — every
+    transaction is counted once per processor whose classes it must reach
+    (thesis Ch. 10's replication metric, in transactions rather than the
+    |D|-normalized factor Phase 3 reports at runtime).
+    """
+    tidlists = np.asarray(tidlists, dtype=np.uint32)
+    total = 0
+    for p in range(n_processors):
+        rows = tidlists[np.asarray(assignment) == p]
+        if len(rows) == 0:
+            continue
+        union = np.bitwise_or.reduce(rows, axis=0)
+        total += int(np.unpackbits(union.view(np.uint8)).sum())
+    return float(total)
+
+
+class ReplAssignment(NamedTuple):
+    """DB-Repl-Min output: the assignment plus its replication cost.
+
+    ``volume`` is the total replicated-transaction volume Σ_p |D'_p| — what
+    Phase 3 will actually move — exact when tidlists are given, NaN without
+    them (``sizes`` are sample-FI counts, not transactions, so no honest
+    volume exists in that case).  The planner compares it with LPT's volume
+    to pick the scheduler.
+    """
+
+    assignment: np.ndarray
+    volume: float
+
+
 def db_repl_min(
     sizes: np.ndarray,        # est. class sizes w_i
     profit: np.ndarray,       # S_ij = |T(U_i ∪ U_j)| shared-transaction counts
     n_processors: int,
-) -> np.ndarray:
+    tidlists: Optional[np.ndarray] = None,  # packed uint32[C, W] → exact volume
+) -> ReplAssignment:
     """Alg. 23 (DB-Repl-Min): replication-aware assignment via greedy QKP.
 
     For each processor in turn, greedily add the unassigned class with the
@@ -63,7 +106,7 @@ def db_repl_min(
     this processor's knapsack, subject to the capacity c = Σw/P.  Greedy is our
     QKP oracle (the thesis leaves the QKP solver open; exact QKP is NP-hard).
 
-    Returns ``assignment int[n_tasks]``.
+    Returns :class:`ReplAssignment` ``(assignment int[n_tasks], volume)``.
     """
     n = len(sizes)
     sizes = np.asarray(sizes, dtype=np.float64)
@@ -98,7 +141,13 @@ def db_repl_min(
                 break
     # last processor takes the remainder
     assignment[assignment < 0] = n_processors - 1
-    return assignment
+
+    volume = (
+        replicated_volume(tidlists, assignment, n_processors)
+        if tidlists is not None
+        else float("nan")
+    )
+    return ReplAssignment(assignment=assignment, volume=volume)
 
 
 def pairwise_shared_transactions(tidlists: np.ndarray) -> np.ndarray:

@@ -1,0 +1,152 @@
+"""Distributed mining launcher — the cluster executor end to end.
+
+Runs planner → exchange → shard-mine → rebalance on N simulated host devices
+(``--devices N`` forks CPU devices before jax imports, launch/host_devices.py)
+or real mesh devices when present, and reports what a cluster operator needs:
+
+  * per-phase time (plan / exchange / mine / merge),
+  * load imbalance (observed DFS trips, max/mean) and the planner's
+    estimation error (predicted vs observed load shares),
+  * a speedup-vs-devices curve (``--curve 1,2,4``) in modeled makespan
+    (Σ_r max_p trips — the barrier-aware metric) and wall time,
+  * exact parity against single-device ``fimi.run`` (``--parity``; exits
+    non-zero on any itemset/support mismatch — the CI gate uses this).
+
+  python -m repro.launch.cluster_mine --db T2I0.048P50PL10TL16 --support 0.1 \
+      -P 4 --devices 4 --parity [--curve 1,2,4] [--no-rebalance]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.launch.host_devices import preparse_devices
+
+preparse_devices()  # must run before anything imports jax
+
+import time  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+
+def run_once(dense, n_items, P, args, eclat_mod, fimi_mod, cluster):
+    """One executor run at P miners; returns (result, wall seconds)."""
+    import jax
+
+    shards = fimi_mod.shard_db(dense, P)
+    params = cluster.ClusterParams(
+        planner=cluster.PlannerParams(
+            min_support_rel=args.support,
+            alpha=args.alpha,
+            scheduler=args.scheduler,
+            n_db_sample=min(2048, dense.shape[0]),
+            n_fi_sample=1024,
+        ),
+        eclat=eclat_mod.EclatConfig(
+            max_out=1 << 15, max_stack=8192, frontier_size=args.frontier
+        ),
+        chunk=args.chunk or None,
+        rebalance=not args.no_rebalance,
+        skew_threshold=args.skew,
+    )
+    t0 = time.perf_counter()
+    res = cluster.execute(
+        shards, n_items, params, jax.random.PRNGKey(args.seed)
+    )
+    return res, time.perf_counter() - t0
+
+
+def main():
+    import jax
+
+    from repro import cluster
+    from repro.core import eclat, fimi
+    from repro.data.ibm_gen import generate_dense, params_from_name
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--db", default="T2I0.048P50PL10TL16")
+    ap.add_argument("--support", type=float, default=0.1)
+    ap.add_argument("-P", type=int, default=4)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="fork N simulated host devices (before jax init)")
+    ap.add_argument("--scheduler", default="auto",
+                    choices=["auto", "lpt", "repl_min"])
+    ap.add_argument("--alpha", type=float, default=0.5)
+    ap.add_argument("--frontier", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="classes per shard per round (0 = auto)")
+    ap.add_argument("--skew", type=float, default=1.25,
+                    help="rebalance when remaining max/mean exceeds this")
+    ap.add_argument("--no-rebalance", action="store_true")
+    ap.add_argument("--curve", default="",
+                    help="comma-separated device counts for a speedup curve")
+    ap.add_argument("--parity", action="store_true",
+                    help="verify exact FI parity vs single-device fimi.run")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    dense = generate_dense(params_from_name(args.db, seed=args.seed))
+    n_items = dense.shape[1]
+    print(
+        f"db={args.db} |D|={dense.shape[0]} |B|={n_items} sup={args.support} "
+        f"P={args.P} devices={len(jax.devices())} "
+        f"rebalance={not args.no_rebalance} scheduler={args.scheduler}"
+    )
+
+    res, wall = run_once(dense, n_items, args.P, args, eclat, fimi, cluster)
+    rep, plan = res.report, res.plan
+    print(f"|F| = {res.table.n_fis}  in {wall:.2f}s  backend={rep.backend}  "
+          f"rounds={rep.n_rounds}  scheduler={plan.scheduler_used}")
+    print("per-phase ms: "
+          + "  ".join(f"{k}={v:.0f}" for k, v in rep.phase_ms.items()))
+    print(f"classes={len(plan.classes)}  "
+          f"volume lpt={plan.lpt_volume:.0f} repl_min={plan.repl_volume:.0f}  "
+          f"replication/round="
+          f"{np.mean([r.replication for r in rep.rounds]):.2f}")
+    print(f"load: observed trips={rep.observed_loads.astype(int).tolist()}  "
+          f"imbalance={rep.imbalance:.2f}  "
+          f"estimation_error={rep.estimation_error():.3f}  "
+          f"donations={len(rep.donations)}")
+
+    if args.curve:
+        counts = [int(c) for c in args.curve.split(",") if c]
+        base_makespan = None
+        print("speedup curve (modeled makespan = sum of per-round max trips):")
+        for Pc in counts:
+            r, w = run_once(dense, n_items, Pc, args, eclat, fimi, cluster)
+            mk = r.report.makespan_trips
+            if base_makespan is None:
+                base_makespan = mk
+            print(f"  P={Pc:<3d} makespan={mk:>8.0f} trips  "
+                  f"speedup={base_makespan / max(mk, 1):.2f}x  wall={w:.2f}s  "
+                  f"imbalance={r.report.imbalance:.2f}")
+
+    if args.parity:
+        fp = fimi.FimiParams(
+            min_support_rel=args.support,
+            n_db_sample=min(2048, dense.shape[0]), n_fi_sample=1024,
+            eclat=eclat.EclatConfig(
+                max_out=1 << 15, max_stack=8192, frontier_size=args.frontier
+            ),
+        )
+        ref = fimi.run(
+            fimi.shard_db(dense, 1), n_items, fp, jax.random.PRNGKey(args.seed),
+            materialize=True,
+        )
+        got = res.table.to_dict()
+        if got != ref.fi_dict:
+            only_got = set(got) - set(ref.fi_dict)
+            only_ref = set(ref.fi_dict) - set(got)
+            diff_supp = {
+                k for k in set(got) & set(ref.fi_dict)
+                if got[k] != ref.fi_dict[k]
+            }
+            print(f"PARITY FAIL: +{len(only_got)} -{len(only_ref)} "
+                  f"support-mismatch={len(diff_supp)}")
+            sys.exit(1)
+        print(f"parity vs single-device fimi.run: OK "
+              f"({len(got)} itemsets, bit-exact supports)")
+
+
+if __name__ == "__main__":
+    main()

@@ -104,6 +104,10 @@ def main():
     ap.add_argument("--cooldown", type=int, default=2,
                     help="blocks after a re-mine before triggers re-arm")
     ap.add_argument("-P", type=int, default=4, help="miners for re-mining")
+    ap.add_argument("--cluster", type=int, default=0, metavar="N",
+                    help="re-mine with the distributed cluster executor over "
+                         "N miners (planner + exchange + shard-mine + "
+                         "rebalance) instead of the in-process fimi.run")
     ap.add_argument("--frontier", type=int, default=16)
     ap.add_argument("--queries", type=int, default=512,
                     help="queries served per ingested block")
@@ -120,18 +124,39 @@ def main():
     breaks = tuple(int(b) for b in args.breaks.split(",") if b != "")
     n_items = gen_params.n_items
     window_tx = args.blocks * args.blocktx
+    if args.cluster and window_tx % args.cluster:
+        ap.error(f"--cluster {args.cluster} must divide the window size "
+                 f"({args.blocks} blocks x {args.blocktx} tx = {window_tx})")
 
-    mine_fn = fimi_mine_fn(
-        P=args.P,
-        fimi_params=fimi.FimiParams(
-            n_db_sample=min(2048, window_tx),
-            n_fi_sample=1024,
-            eclat=eclat.EclatConfig(
-                max_out=1 << 15, max_stack=8192, frontier_size=args.frontier
+    if args.cluster:
+        from repro import cluster as cluster_mod
+
+        mine_fn = cluster_mod.cluster_mine_fn(
+            P=args.cluster,
+            cluster_params=cluster_mod.ClusterParams(
+                planner=cluster_mod.PlannerParams(
+                    n_db_sample=min(2048, window_tx), n_fi_sample=1024
+                ),
+                eclat=eclat.EclatConfig(
+                    max_out=1 << 15, max_stack=8192,
+                    frontier_size=args.frontier,
+                ),
             ),
-        ),
-        seed=args.seed,
-    )
+            seed=args.seed,
+        )
+    else:
+        mine_fn = fimi_mine_fn(
+            P=args.P,
+            fimi_params=fimi.FimiParams(
+                n_db_sample=min(2048, window_tx),
+                n_fi_sample=1024,
+                eclat=eclat.EclatConfig(
+                    max_out=1 << 15, max_stack=8192,
+                    frontier_size=args.frontier,
+                ),
+            ),
+            seed=args.seed,
+        )
     sp = StreamParams(
         n_blocks=args.blocks, block_tx=args.blocktx,
         min_support_rel=args.support, min_confidence=args.minconf,
@@ -154,6 +179,7 @@ def main():
     torn = 0
     max_stale = 0.0
     remine_log = []
+    prev_gen = -1
     for dense_block, segment in drifting_stream(
         gen_params, n_blocks=args.stream, block_tx=args.blocktx,
         breaks=breaks,
@@ -164,7 +190,18 @@ def main():
         ev = sm.admit(dense_block)
         ingest_s += time.perf_counter() - t0
         if ev.remined:
-            torn += parity_failures(sm, rng)     # after the swap
+            post = parity_failures(sm, rng)      # after the swap
+            torn += post
+            if args.cluster:
+                # a distributed re-mine must preserve the serving invariants:
+                # the swap is atomic (no torn index) and bumps the generation
+                assert post == 0, (
+                    f"cluster re-mine broke index parity ({post} failures)"
+                )
+                assert ev.generation == prev_gen + 1, (
+                    f"cluster re-mine generation {ev.generation} != "
+                    f"{prev_gen + 1}"
+                )
             remine_log.append(
                 (ev.block_index, segment, ev.remine_reason, ev.mine_ms,
                  ev.swap_ms, sm.engine.index.n_fis)
@@ -173,6 +210,7 @@ def main():
                   f"re-mine [{ev.remine_reason}] -> F={sm.engine.index.n_fis} "
                   f"R={sm.engine.rules.n_rules} gen={ev.generation} "
                   f"mine={ev.mine_ms:.0f}ms swap={ev.swap_ms:.2f}ms")
+        prev_gen = sm.engine.generation if sm.engine else -1
         if sm.engine is not None:
             max_stale = max(max_stale, sm.staleness())   # off the clock
             dt, nd = serve_block(sm, rng, args.queries)

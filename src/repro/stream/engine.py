@@ -125,8 +125,11 @@ def fimi_mine_fn(
                 max_out=1 << 14, max_stack=4096, frontier_size=16
             ),
         )
+        # (abs−0.5)/n_tx survives the float round-trip: fimi.run's
+        # ceil(rel·n_tx) lands exactly on abs_minsup, whereas abs/n_tx can
+        # ceil to abs+1 and silently drop itemsets at exactly abs_minsup
         params = dataclasses.replace(
-            base, min_support_rel=abs_minsup / n_tx
+            base, min_support_rel=(abs_minsup - 0.5) / n_tx
         )
         res = fimi.run(
             shards, window.n_items, params, jax.random.PRNGKey(seed),

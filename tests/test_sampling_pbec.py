@@ -165,6 +165,46 @@ def test_db_repl_min_improves_sharing(small_db):
     )
     profit = schedule.pairwise_shared_transactions(tids)
     sizes = [c.est_count for c in classes]
-    a = schedule.db_repl_min(np.asarray(sizes), profit, 4)
-    assert set(a) <= set(range(4))
-    assert len(a) == len(classes)
+    r = schedule.db_repl_min(np.asarray(sizes), profit, 4, tidlists=tids)
+    assert set(r.assignment) <= set(range(4))
+    assert len(r.assignment) == len(classes)
+    # the reported volume is the exact Σ_p |D'_p| of the returned assignment
+    assert r.volume == schedule.replicated_volume(tids, r.assignment, 4)
+    # and never better than the no-replication floor |∪ T(U_i)|
+    union = np.bitwise_or.reduce(tids.astype(np.uint32), axis=0)
+    floor = int(np.unpackbits(union.view(np.uint8)).sum())
+    assert r.volume >= floor
+
+
+def test_schedulers_makespan_and_volume_tradeoff():
+    """LPT optimizes the makespan, DB-Repl-Min the replicated volume; on a
+    skewed size vector with clustered tidlists each wins its own metric."""
+    rng = np.random.default_rng(42)
+    C, P, W = 24, 4, 8
+    sizes = rng.zipf(1.4, C).astype(np.float64)
+    # two tid "clusters": classes sharing a cluster share most transactions
+    tids = np.zeros((C, W), np.uint32)
+    for i in range(C):
+        cluster = i % 2
+        base = np.uint32(0x0F0F0F0F if cluster == 0 else 0xF0F0F0F0)
+        noise = rng.integers(0, 1 << 32, W, dtype=np.uint64).astype(np.uint32)
+        tids[i] = base & noise
+    profit = schedule.pairwise_shared_transactions(tids)
+
+    lpt = schedule.lpt_schedule(sizes, P)
+    rep = schedule.db_repl_min(sizes, profit, P, tidlists=tids)
+
+    mk_lpt = schedule.makespan_of(sizes, lpt, P)
+    mk_rep = schedule.makespan_of(sizes, rep.assignment, P)
+    vol_lpt = schedule.replicated_volume(tids, lpt, P)
+
+    # LPT makespan is sound (Graham bound) and no worse than the QKP greedy's
+    assert schedule.lpt_makespan_bound_ok(sizes, lpt, P)
+    assert mk_lpt <= mk_rep + 1e-9
+    # the replication-aware greedy moves fewer (or equal) transactions
+    assert rep.volume <= vol_lpt + 1e-9
+    # without tidlists no honest volume exists (sizes are FI counts, not
+    # transactions) — the report says so with NaN rather than a wrong number
+    no_tids = schedule.db_repl_min(sizes, profit, P)
+    assert np.array_equal(no_tids.assignment, rep.assignment)
+    assert np.isnan(no_tids.volume)

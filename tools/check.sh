@@ -1,20 +1,24 @@
 #!/usr/bin/env bash
-# CI gate (also the local pre-push check): tier-1 tests + smoke benchmarks.
+# CI gate (also the local pre-push check): tier-1 tests + smoke benchmarks
+# + the 4-host-device distributed-mining parity gate.
 #
 #   tools/check.sh            # everything
 #   tools/check.sh --tests    # tier-1 pytest only
 #   tools/check.sh --bench    # smoke benchmarks only
+#   tools/check.sh --cluster  # 4-device cluster parity only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 run_tests=1
 run_bench=1
+run_cluster=1
 case "${1:-}" in
-  --tests) run_bench=0 ;;
-  --bench) run_tests=0 ;;
+  --tests) run_bench=0; run_cluster=0 ;;
+  --bench) run_tests=0; run_cluster=0 ;;
+  --cluster) run_tests=0; run_bench=0 ;;
   "") ;;
-  *) echo "usage: tools/check.sh [--tests|--bench]" >&2; exit 2 ;;
+  *) echo "usage: tools/check.sh [--tests|--bench|--cluster]" >&2; exit 2 ;;
 esac
 
 if [[ $run_tests -eq 1 ]]; then
@@ -23,8 +27,16 @@ if [[ $run_tests -eq 1 ]]; then
 fi
 
 if [[ $run_bench -eq 1 ]]; then
-  echo "== smoke benchmarks (kernels + serve + stream) =="
+  echo "== smoke benchmarks (kernels + serve + stream + cluster) =="
   python -m benchmarks.run --smoke
+fi
+
+if [[ $run_cluster -eq 1 ]]; then
+  echo "== cluster parity on 4 simulated host devices =="
+  # --devices sets the XLA host-device-count flag before jax imports
+  # (launch/host_devices.py); --parity exits non-zero on any FI mismatch
+  python -m repro.launch.cluster_mine --devices 4 -P 4 \
+    --db T0.5I0.024P8PL5TL8 --support 0.08 --parity
 fi
 
 echo "check.sh: OK"
