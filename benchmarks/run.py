@@ -8,16 +8,18 @@
   stream       → fused delta-update vs full window recompute (§Streaming)
   cluster      → distributed-executor speedup curve + rebalancing payoff
                  (§Distributed mining)
+  io           → out-of-core store: streamed vs in-RAM mine throughput +
+                 host high-water marks, O(block) residency gates (§Storage)
   roofline     → EXPERIMENTS.md §Roofline  (reads results/dryrun/*.json)
 
 ``python -m benchmarks.run [--fast|--full|--smoke] [--only NAME]``.  Prints
 ``name,us_per_call,derived`` CSV lines where applicable.  Defaults to the
 fast variant so the whole suite stays CPU-friendly; ``--smoke`` runs only
-the kernels + serve + stream + cluster sections in fast mode (the CI gate,
-tools/check.sh).  The kernels, serve, stream, and cluster sections
-additionally write ``BENCH_kernels.json`` / ``BENCH_serve.json`` /
-``BENCH_stream.json`` / ``BENCH_cluster.json`` (shapes, reps, µs) so the
-perf trajectory is machine-readable across PRs.
+the kernels + serve + stream + cluster + io sections in fast mode (the CI
+gate, tools/check.sh).  The kernels, serve, stream, cluster, and io
+sections additionally write ``BENCH_kernels.json`` / ``BENCH_serve.json`` /
+``BENCH_stream.json`` / ``BENCH_cluster.json`` / ``BENCH_io.json``
+(shapes, reps, µs) so the perf trajectory is machine-readable across PRs.
 """
 from __future__ import annotations
 
@@ -38,10 +40,10 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     fast = not args.full
 
-    sections = ["kernels", "serve", "stream", "cluster", "speedup", "pbec",
-                "replication", "roofline"]
+    sections = ["kernels", "serve", "stream", "cluster", "io", "speedup",
+                "pbec", "replication", "roofline"]
     if args.smoke:
-        sections = ["kernels", "serve", "stream", "cluster"]
+        sections = ["kernels", "serve", "stream", "cluster", "io"]
     if args.only:
         sections = [args.only]
 
@@ -64,6 +66,10 @@ def main() -> None:
             from benchmarks import cluster
 
             cluster.run(fast=fast)
+        elif name == "io":
+            from benchmarks import io
+
+            io.run(fast=fast)
         elif name == "speedup":
             from benchmarks import speedup
 

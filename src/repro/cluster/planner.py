@@ -97,13 +97,32 @@ class MiningPlan:
 
 
 def plan(
-    tx_shards: jnp.ndarray,   # uint32[P, T, IW] — horizontal packed shards
+    tx_shards,                # uint32[P, T, IW] shards — or a store.TxStore
     n_items: int,
     params: PlannerParams,
     key: jax.Array,
+    *,
+    P: Optional[int] = None,
 ) -> MiningPlan:
-    """Build the mining plan from a database sample (Phases 1–2)."""
-    P, T, IW = tx_shards.shape
+    """Build the mining plan from a database sample (Phases 1–2).
+
+    Accepts either the device shards or an on-disk :class:`repro.store.TxStore`
+    (``P`` required then).  The store path draws the Thm 6.1 sample straight
+    off disk (``store.reader.sample_rows`` — same PRNG indices, bit-exact
+    rows) so planning runs in O(sample + block) host memory without the
+    database ever being resident; everything downstream of the sample is
+    identical, so the two paths produce the same plan bit for bit.
+    """
+    store = None
+    if not hasattr(tx_shards, "shape"):   # a TxStore: plan off-disk
+        store = tx_shards
+        if P is None:
+            raise ValueError("P (shard count) is required when planning a TxStore")
+        if n_items is None:
+            n_items = store.n_items
+        T, IW = store.n_tx // P, store.n_words
+    else:
+        P, T, IW = tx_shards.shape
     n_tx = P * T
     abs_minsup = int(np.ceil(params.min_support_rel * n_tx))
 
@@ -112,9 +131,14 @@ def plan(
         params.eps_db, params.delta_db
     )
     n_db = min(n_db, n_tx)
-    all_tx = tx_shards.reshape(n_tx, IW)
     k_samp, k_mine = jax.random.split(key)
-    rows = bm.sample_transactions(all_tx, k_samp, n_db, n_tx)
+    if store is not None:
+        from repro.store import reader as store_reader
+
+        rows = store_reader.sample_rows(store, k_samp, n_db, n_tx=n_tx)
+    else:
+        all_tx = tx_shards.reshape(n_tx, IW)
+        rows = bm.sample_transactions(all_tx, k_samp, n_db, n_tx)
     sample_bitdb = bm.rebuild_vertical(rows, n_items, n_db)
     sample_minsup = int(np.ceil(params.min_support_rel * n_db))
     eps_eff = math.sqrt(math.log(2.0 / params.delta_db) / (2.0 * n_db))

@@ -117,7 +117,7 @@ def shard_map_spmd(fn, P: int, mesh):
 
 
 def run(
-    tx_shards: jnp.ndarray,   # uint32[P, T, IW] — horizontal packed D_i shards
+    tx_shards,                # uint32[P, T, IW] shards — or a store.TxStore
     n_items: int,
     params: FimiParams,
     key: jax.Array,
@@ -125,7 +125,27 @@ def run(
     spmd=vmap_spmd,
     mesh=None,
     materialize: bool = False,
+    P: Optional[int] = None,
+    host_budget_blocks: int = 2,
+    reader=None,
 ) -> FimiResult:
+    if not hasattr(tx_shards, "shape"):   # a TxStore: mine out-of-core
+        from repro.store import reader as store_reader
+
+        if P is None:
+            raise ValueError("P (miner count) is required when mining a TxStore")
+        if n_items is None:
+            n_items = tx_shards.n_items
+        # Assemble the device shards block-by-block through the double-
+        # buffered reader: host residency stays within the block budget, the
+        # device holds only the packed working set, and the result is
+        # bit-exact with shard_db(dense, P) — so everything below (sampling
+        # included) matches the in-memory path bit for bit.  Drivers pass
+        # ``reader`` (a BlockReader on this store) to observe the streamed
+        # host high-water mark of this very pass.
+        tx_shards = store_reader.to_device_shards(
+            tx_shards, P, host_budget_blocks=host_budget_blocks, reader=reader
+        )
     P, T, IW = tx_shards.shape
     n_tx = P * T
     abs_minsup = int(np.ceil(params.min_support_rel * n_tx))

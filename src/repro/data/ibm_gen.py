@@ -134,11 +134,43 @@ def _emit_transactions(
     return dense
 
 
-def generate_dense(params: IBMParams) -> np.ndarray:
-    """Generate a dense bool transaction matrix ``[n_tx, n_items]``."""
+def generate_blocks(params: IBMParams, block_tx: int):
+    """Yield the database as dense bool blocks ``[≤block_tx, n_items]``.
+
+    The O(block) generation path: each block's RNG draws (lengths, pattern
+    picks, corruption) happen when the block is emitted, so peak host
+    residency is one block — never the full ``[N, I]`` matrix.  The
+    store spill (``repro.store.write_ibm_store``) packs each block as it
+    lands, keeping generate→pack→disk O(block) end to end.
+
+    Deterministic under ``params.seed``.  With ``block_tx >= n_tx`` the
+    single emitted block is bit-identical to :func:`generate_dense`; for
+    smaller blocks the draw *order* differs (per-block instead of whole-DB
+    batching), so a blocked database is its own deterministic dataset, not
+    a re-chunking of the unblocked one.
+    """
+    if block_tx <= 0:
+        raise ValueError(f"block_tx must be positive (got {block_tx})")
     rng = np.random.default_rng(params.seed)
     pool = _draw_pattern_pool(rng, params)
-    return _emit_transactions(rng, params, pool, params.n_tx)
+    done = 0
+    while done < params.n_tx:
+        b = min(block_tx, params.n_tx - done)
+        yield _emit_transactions(rng, params, pool, b)
+        done += b
+
+
+def generate_dense(params: IBMParams) -> np.ndarray:
+    """Generate a dense bool transaction matrix ``[n_tx, n_items]``.
+
+    One-shot emission (a single :func:`generate_blocks` block), bit-exact
+    with every previous release.  For databases that should never be
+    resident at once, spill blocks to disk instead:
+    ``repro.store.write_ibm_store(params, dir, block_tx)``.
+    """
+    if params.n_tx == 0:
+        return np.zeros((0, params.n_items), dtype=bool)
+    return next(generate_blocks(params, params.n_tx))
 
 
 def drifting_stream(

@@ -29,17 +29,23 @@ import time  # noqa: E402
 import numpy as np  # noqa: E402
 
 
-def run_once(dense, n_items, P, args, eclat_mod, fimi_mod, cluster):
-    """One executor run at P miners; returns (result, wall seconds)."""
+def run_once(dense, n_items, P, args, eclat_mod, fimi_mod, cluster,
+             store=None):
+    """One executor run at P miners; returns (result, wall seconds).
+
+    With ``store`` set, the plan is computed **off disk** (Thm 6.1 sample
+    via ``store.reader.sample_rows`` — bit-exact vs the in-RAM sample) and
+    the data-plane shards are assembled block-by-block through the
+    double-buffered reader; ``dense`` is only used otherwise.
+    """
     import jax
 
-    shards = fimi_mod.shard_db(dense, P)
     params = cluster.ClusterParams(
         planner=cluster.PlannerParams(
             min_support_rel=args.support,
             alpha=args.alpha,
             scheduler=args.scheduler,
-            n_db_sample=min(2048, dense.shape[0]),
+            n_db_sample=min(2048, store.n_tx if store else dense.shape[0]),
             n_fi_sample=1024,
         ),
         eclat=eclat_mod.EclatConfig(
@@ -49,10 +55,23 @@ def run_once(dense, n_items, P, args, eclat_mod, fimi_mod, cluster):
         rebalance=not args.no_rebalance,
         skew_threshold=args.skew,
     )
+    key = jax.random.PRNGKey(args.seed)
     t0 = time.perf_counter()
-    res = cluster.execute(
-        shards, n_items, params, jax.random.PRNGKey(args.seed)
-    )
+    if store is not None:
+        from repro.store.reader import to_device_shards
+
+        plan = cluster.plan(store, None, params.planner, key, P=P)
+        t1 = time.perf_counter()
+        shards = jax.block_until_ready(to_device_shards(store, P))
+        t2 = time.perf_counter()
+        res = cluster.execute(shards, n_items, params, key, plan=plan)
+        # execute() saw a precomputed plan (plan≈0): charge the off-disk
+        # planning + block-streamed assembly where they actually happened
+        res.report.phase_ms["plan"] = (t1 - t0) * 1e3
+        res.report.phase_ms["assemble"] = (t2 - t1) * 1e3
+    else:
+        shards = fimi_mod.shard_db(dense, P)
+        res = cluster.execute(shards, n_items, params, key)
     return res, time.perf_counter() - t0
 
 
@@ -61,10 +80,17 @@ def main():
 
     from repro import cluster
     from repro.core import eclat, fimi
-    from repro.data.ibm_gen import generate_dense, params_from_name
+    from repro.launch.data_source import resolve_source
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--db", default="T2I0.048P50PL10TL16")
+    ap.add_argument("--dataset", default="",
+                    help="mine a FIMI .dat file (ingested into a store)")
+    ap.add_argument("--store", default="",
+                    help="mine out-of-core from this TxStore dir "
+                         "(spilled from --db when empty)")
+    ap.add_argument("--blocktx", type=int, default=256,
+                    help="store block size (rows) when spilling/ingesting")
     ap.add_argument("--support", type=float, default=0.1)
     ap.add_argument("-P", type=int, default=4)
     ap.add_argument("--devices", type=int, default=0,
@@ -85,15 +111,23 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    dense = generate_dense(params_from_name(args.db, seed=args.seed))
-    n_items = dense.shape[1]
+    store, dense, src = resolve_source(
+        args.dataset, args.store, args.db,
+        block_tx=args.blocktx, seed=args.seed,
+    )
+    n_tx = store.n_tx if store is not None else dense.shape[0]
+    n_items = store.n_items if store is not None else dense.shape[1]
     print(
-        f"db={args.db} |D|={dense.shape[0]} |B|={n_items} sup={args.support} "
+        f"{src} |D|={n_tx} |B|={n_items} sup={args.support} "
         f"P={args.P} devices={len(jax.devices())} "
         f"rebalance={not args.no_rebalance} scheduler={args.scheduler}"
     )
+    if store is not None:
+        print(f"store: {store.n_blocks} blocks x <= {store.block_tx} tx "
+              f"({store.total_bytes} packed bytes; plan sampled off-disk)")
 
-    res, wall = run_once(dense, n_items, args.P, args, eclat, fimi, cluster)
+    res, wall = run_once(dense, n_items, args.P, args, eclat, fimi, cluster,
+                         store=store)
     rep, plan = res.report, res.plan
     print(f"|F| = {res.table.n_fis}  in {wall:.2f}s  backend={rep.backend}  "
           f"rounds={rep.n_rounds}  scheduler={plan.scheduler_used}")
@@ -113,7 +147,8 @@ def main():
         base_makespan = None
         print("speedup curve (modeled makespan = sum of per-round max trips):")
         for Pc in counts:
-            r, w = run_once(dense, n_items, Pc, args, eclat, fimi, cluster)
+            r, w = run_once(dense, n_items, Pc, args, eclat, fimi, cluster,
+                            store=store)
             mk = r.report.makespan_trips
             if base_makespan is None:
                 base_makespan = mk
@@ -122,6 +157,8 @@ def main():
                   f"imbalance={r.report.imbalance:.2f}")
 
     if args.parity:
+        if dense is None:
+            dense = store.to_dense()  # O(n_tx) host — parity reference only
         fp = fimi.FimiParams(
             min_support_rel=args.support,
             n_db_sample=min(2048, dense.shape[0]), n_fi_sample=1024,

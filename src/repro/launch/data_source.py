@@ -1,0 +1,50 @@
+"""Shared --dataset / --store / --db data-source resolution for launchers.
+
+``launch/mine.py`` and ``launch/cluster_mine.py`` take the same three data
+sources; this resolves them in one place:
+
+  * ``--dataset f.dat``  — ingest a FIMI file into a store (at ``--store``
+    or a temp dir) and mine it out of core;
+  * ``--store dir/``     — open an existing :class:`~repro.store.TxStore`,
+    or spill the ``--db`` IBM database into it block-by-block first;
+  * neither              — generate the ``--db`` database dense in RAM
+    (the seed behavior).
+
+Returns ``(store, dense, label)`` where exactly one of ``store`` /
+``dense`` is set.
+"""
+from __future__ import annotations
+
+import tempfile
+from typing import Optional, Tuple
+
+
+def resolve_source(
+    dataset: str,
+    store_dir: str,
+    db: str,
+    *,
+    block_tx: int,
+    seed: int,
+) -> Tuple[Optional[object], Optional[object], str]:
+    """Resolve the launcher's data source; see module docstring."""
+    if dataset:
+        from repro.store import ingest_dat
+
+        directory = store_dir or tempfile.mkdtemp(prefix="txstore_")
+        store = ingest_dat(dataset, directory, block_tx=block_tx)
+        return store, None, f"dataset={dataset}"
+    if store_dir:
+        from repro.data.ibm_gen import params_from_name
+        from repro.store import TxStore, write_ibm_store
+
+        if TxStore.exists(store_dir):
+            return TxStore.open(store_dir), None, f"store={store_dir}"
+        store = write_ibm_store(
+            params_from_name(db, seed=seed), store_dir, block_tx=block_tx
+        )
+        return store, None, f"store={store_dir} (spilled from {db})"
+    from repro.data.ibm_gen import generate_dense, params_from_name
+
+    dense = generate_dense(params_from_name(db, seed=seed))
+    return None, dense, f"db={db}"

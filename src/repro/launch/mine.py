@@ -6,12 +6,30 @@ pod the miner axis maps onto the 256 chips of `make_production_mesh` row- or
 column-major; on this container use --devices to fork virtual CPU devices
 (set before jax import, hence the flag is handled in __main__ preamble).
 
+Three data sources:
+
+  * default          — generate the --db IBM database in RAM (seed behavior);
+  * --store DIR      — mine **out of core** from an on-disk TxStore (spilled
+                       there block-by-block from --db first if DIR is empty);
+  * --dataset F.dat  — ingest a standard FIMI file into a store, then mine it
+                       out of core (--store names the store dir, else a temp).
+
+--parity is the exactness gate: mine the same database through the dense
+in-RAM path and require the two FITables to match bit for bit; exits
+non-zero on any difference (CI runs this on a store larger than the host
+block budget).
+
   python -m repro.launch.mine --db T2I0.048P50PL10TL16 --support 0.1 \
       --variant reservoir -P 8 [--devices 8]
+  python -m repro.launch.mine --db T2I0.048P50PL10TL16 --support 0.1 \
+      --store /tmp/txstore --blocktx 256 --parity
+  python -m repro.launch.mine --dataset examples/retail_tiny.dat \
+      --support 0.2 -P 2 --parity
 """
 from __future__ import annotations
 
 import argparse
+import sys
 
 from repro.launch.host_devices import preparse_devices
 
@@ -19,18 +37,28 @@ preparse_devices()  # must run before anything imports jax
 
 import time  # noqa: E402
 
-import numpy as np  # noqa: E402
-
 
 def main():
     import jax
 
     from repro.core import eclat, fimi
-    from repro.data.ibm_gen import generate_dense, params_from_name
+    from repro.launch.data_source import resolve_source
     from repro.launch.mesh import make_miner_mesh
+    from repro.store.reader import BlockReader
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--db", default="T2I0.048P50PL10TL16")
+    ap.add_argument("--dataset", default="",
+                    help="mine a FIMI .dat file (ingested into a store)")
+    ap.add_argument("--store", default="",
+                    help="mine out-of-core from this TxStore dir "
+                         "(spilled from --db when empty)")
+    ap.add_argument("--blocktx", type=int, default=256,
+                    help="store block size (rows) when spilling/ingesting")
+    ap.add_argument("--budget-blocks", type=int, default=2,
+                    help="host block budget of the streamed reader")
+    ap.add_argument("--parity", action="store_true",
+                    help="verify bit-exact FITable vs the dense in-RAM path")
     ap.add_argument("--support", type=float, default=0.1)
     ap.add_argument("--variant", default="reservoir",
                     choices=["seq", "par", "reservoir"])
@@ -43,13 +71,20 @@ def main():
                     help="DFS nodes mined per while_loop trip (K)")
     args = ap.parse_args()
 
-    dense = generate_dense(params_from_name(args.db, seed=args.seed))
-    n_items = dense.shape[1]
-    shards = fimi.shard_db(dense, args.P)
+    # ---- resolve the data source -------------------------------------------
+    store, dense, src = resolve_source(
+        args.dataset, args.store, args.db,
+        block_tx=args.blocktx, seed=args.seed,
+    )
+    if store is not None:
+        n_tx, n_items = store.n_tx, store.n_items
+    else:
+        n_tx, n_items = dense.shape
+
     params = fimi.FimiParams(
         variant=args.variant, min_support_rel=args.support,
         alpha=args.alpha, scheduler=args.scheduler,
-        n_db_sample=min(2048, dense.shape[0]), n_fi_sample=1024,
+        n_db_sample=min(2048, n_tx), n_fi_sample=1024,
         eclat=eclat.EclatConfig(
             max_out=1 << 15, max_stack=8192, frontier_size=args.frontier
         ),
@@ -58,15 +93,33 @@ def main():
     spmd = fimi.shard_map_spmd if use_shard_map else fimi.vmap_spmd
     mesh = make_miner_mesh(args.P) if use_shard_map else None
     print(
-        f"db={args.db} |D|={dense.shape[0]} |B|={n_items} sup={args.support} "
+        f"{src} |D|={n_tx} |B|={n_items} sup={args.support} "
         f"variant={args.variant} P={args.P} frontier={args.frontier} "
         f"backend={'shard_map' if use_shard_map else 'vmap'}"
     )
+    if store is not None:
+        budget = args.budget_blocks * max(store.max_block_bytes, 1)
+        print(
+            f"store: {store.n_blocks} blocks x <= {store.block_tx} tx "
+            f"({store.total_bytes} packed bytes on disk)  "
+            f"host budget = {args.budget_blocks} blocks ({budget} bytes)"
+        )
+
     t0 = time.time()
-    res = fimi.run(
-        shards, n_items, params, jax.random.PRNGKey(args.seed),
-        spmd=spmd, mesh=mesh,
-    )
+    key = jax.random.PRNGKey(args.seed)
+    if store is not None:
+        # the mine's own block stream is the residency measurement: fimi.run
+        # assembles the shards through this reader (one pass, no extra I/O)
+        reader = BlockReader(store, args.budget_blocks)
+        res = fimi.run(
+            store, None, params, key, spmd=spmd, mesh=mesh,
+            materialize=args.parity, P=args.P, reader=reader,
+        )
+    else:
+        res = fimi.run(
+            fimi.shard_db(dense, args.P), n_items, params, key,
+            spmd=spmd, mesh=mesh, materialize=args.parity,
+        )
     dt = time.time() - t0
     w = res.work_iters.astype(float)
     print(f"|F| = {res.n_fis}  in {dt:.2f}s")
@@ -74,6 +127,37 @@ def main():
           f"exchange_overflow={res.exchange_overflow}")
     print(f"per-miner work (DFS trips): {res.work_iters.tolist()}  "
           f"balance={w.max()/max(w.mean(),1):.2f}")
+    if store is not None:
+        print(f"streamed host high-water: {reader.peak_host_bytes} bytes "
+              f"(budget {reader.budget_bytes})")
+
+    # ---- parity gate: out-of-core result == dense in-RAM result ------------
+    if args.parity:
+        if store is None:
+            print("--parity needs --store or --dataset (nothing to compare)")
+            sys.exit(2)
+        if store.total_bytes <= reader.budget_bytes:
+            print(f"note: store ({store.total_bytes}B) fits the host budget "
+                  f"({reader.budget_bytes}B); gate still exact but not "
+                  f"out-of-core — use a bigger --db or smaller --blocktx")
+        dense_ref = store.to_dense()  # O(n_tx) host — the gate's reference
+        ref = fimi.run(
+            fimi.shard_db(dense_ref, args.P), n_items, params, key,
+            spmd=spmd, mesh=mesh, materialize=True,
+        )
+        got, want = res.fi_dict, ref.fi_dict
+        if got != want:
+            only_got = set(got) - set(want)
+            only_ref = set(want) - set(got)
+            diff = {k for k in set(got) & set(want) if got[k] != want[k]}
+            print(f"PARITY FAIL: +{len(only_got)} -{len(only_ref)} "
+                  f"support-mismatch={len(diff)}")
+            sys.exit(1)
+        print(f"parity vs dense in-RAM fimi.run: OK ({len(got)} itemsets, "
+              f"bit-exact supports; store {store.total_bytes}B > "
+              f"host budget {reader.budget_bytes}B)"
+              if store.total_bytes > reader.budget_bytes else
+              f"parity vs dense in-RAM fimi.run: OK ({len(got)} itemsets)")
 
 
 if __name__ == "__main__":

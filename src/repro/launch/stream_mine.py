@@ -115,6 +115,8 @@ def main():
     ap.add_argument("--topk", type=int, default=5)
     ap.add_argument("--minconf", type=float, default=0.6)
     ap.add_argument("--cache", type=int, default=2048)
+    ap.add_argument("--spill", default="", metavar="DIR",
+                    help="persist expired window blocks to a TxStore at DIR")
     ap.add_argument("--force", default=None,
                     choices=[None, "pallas", "ref", "interpret"])
     ap.add_argument("--seed", type=int, default=0)
@@ -164,7 +166,7 @@ def main():
         border_hysteresis=args.hysteresis, check_every=args.check_every,
         cooldown_blocks=args.cooldown,
         batch=args.batch, top_k=args.topk, cache_capacity=args.cache,
-        force=args.force, seed=args.seed,
+        force=args.force, spill_dir=args.spill or None, seed=args.seed,
     )
     sm = StreamingMiner(sp, n_items, mine_fn=mine_fn)
     print(f"stream: db-family={args.db} |B|={n_items} window={args.blocks}"
@@ -247,6 +249,11 @@ def main():
           f"invalidations={es['invalidations']}")
     print(f"torn-index parity failures: {torn}"
           + ("  <-- BUG" if torn else "  (zero = atomic swaps)"))
+    if sm.spill is not None:
+        hist = sm.spill.store()
+        print(f"spill: {hist.n_blocks} expired blocks persisted to "
+              f"{args.spill} ({hist.n_tx} tx, {hist.total_bytes} packed "
+              f"bytes) — re-minable via `launch.mine --store`")
 
 
 if __name__ == "__main__":

@@ -22,4 +22,4 @@ from repro.stream.engine import (  # noqa: F401
     fimi_mine_fn,
 )
 from repro.stream.monitor import DriftMonitor, DriftVerdict  # noqa: F401
-from repro.stream.window import SlidingWindow  # noqa: F401
+from repro.stream.window import SlidingWindow, WindowSpill  # noqa: F401

@@ -34,7 +34,7 @@ from repro.serve.cache import QueryCache
 from repro.serve.engine import QueryEngine
 from repro.serve.index import build_indexes
 from repro.stream.monitor import DriftMonitor, DriftVerdict
-from repro.stream.window import SlidingWindow
+from repro.stream.window import SlidingWindow, WindowSpill
 
 MineFn = Callable[[SlidingWindow, int], Dict[frozenset, int]]
 
@@ -57,6 +57,7 @@ class StreamParams:
     top_k: int = 5
     cache_capacity: int = 2048
     force: Optional[str] = None     # kernel backend pin (kernels.ops)
+    spill_dir: Optional[str] = None  # persist expired blocks to a TxStore
     seed: int = 0
 
 
@@ -173,6 +174,12 @@ class StreamingMiner:
             seed=params.seed,
         )
         self.mine_fn = mine_fn or fimi_mine_fn(seed=params.seed)
+        # store-backed spill: evicted blocks persist as the stream's history
+        self.spill: Optional[WindowSpill] = (
+            WindowSpill(params.spill_dir, params.block_tx, n_items)
+            if params.spill_dir
+            else None
+        )
         self.cache = QueryCache(capacity=params.cache_capacity)
         self.engine: Optional[QueryEngine] = None
         self.current_supports: Optional[np.ndarray] = None  # int64[F], exact
@@ -230,6 +237,8 @@ class StreamingMiner:
         arrive = jnp.asarray(block, jnp.uint32)
 
         self.window, expired = self.window.admit(arrive)
+        if expired is not None and self.spill is not None:
+            self.spill.append(expired)
         self.monitor.admit(block)
         self.stats.blocks_in += 1
         self.stats.tx_in += self.window.block_tx

@@ -29,6 +29,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bitmap as bm
 
@@ -145,3 +146,48 @@ class SlidingWindow:
     def to_bitmap_db(self) -> bm.BitmapDB:
         """Full BitmapDB of the current window (the re-mine input)."""
         return bm.rebuild_vertical(self.rows(), self.n_items, self.n_tx)
+
+
+class WindowSpill:
+    """Store-backed spill mode: expired blocks persist instead of vanishing.
+
+    Wraps an append-only :class:`repro.store.StoreWriter` on ``directory``;
+    every block the ring evicts is appended (oldest → newest, the stream's
+    arrival order), so the on-disk store is the stream's **history** beyond
+    the window — re-minable later with ``fimi.run(store, …)`` or auditable
+    with the streamed support counters, at O(block) host cost at both ends.
+    An existing store at ``directory`` is resumed (appended after its last
+    block; geometry must match), never reset — a restarted stream extends
+    its history.
+
+    The engine wires this up via ``StreamParams.spill_dir``; standalone use::
+
+        spill = WindowSpill(directory, window.block_tx, window.n_items)
+        window, expired = window.admit(block)
+        if expired is not None:
+            spill.append(expired)
+    """
+
+    def __init__(
+        self, directory: str, block_tx: int, n_items: int, *,
+        source: str = "stream-spill",
+    ):
+        from repro.store.store import StoreWriter
+
+        self.directory = directory
+        self._writer = StoreWriter(
+            directory, n_items=n_items, block_tx=block_tx, source=source,
+            resume=True,
+        )
+
+    def append(self, expired_packed) -> int:
+        """Persist one evicted packed block ``uint32[T_blk, IW]``."""
+        return self._writer.append_packed(np.asarray(expired_packed))
+
+    @property
+    def n_spilled(self) -> int:
+        return len(self._writer.manifest.blocks)
+
+    def store(self):
+        """Open the spilled history as a readable :class:`TxStore`."""
+        return self._writer.close()

@@ -1,0 +1,431 @@
+"""Out-of-core transaction store: format round-trips, streamed reader
+residency, off-disk Thm 6.1 sampling, and bit-exact mining parity of
+``fimi.run(store)`` / ``planner.plan(store)`` vs the dense in-RAM path."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.core import eclat, fimi, sampling
+from repro.data.ibm_gen import IBMParams, generate_blocks, generate_dense
+from repro.store import (
+    BlockReader,
+    HostBudgetExceeded,
+    StoreWriter,
+    TxStore,
+    export_dat,
+    gather_rows,
+    ingest_dat,
+    pack_bool_np,
+    parse_dat,
+    sample_rows,
+    streamed_itemset_supports,
+    to_device_shards,
+    unpack_bool_np,
+    write_dat,
+    write_ibm_store,
+)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "..", "examples",
+                       "retail_tiny.dat")
+
+
+def _random_dense(n_tx, n_items, seed, density=0.3):
+    rng = np.random.default_rng(seed)
+    return rng.random((n_tx, n_items)) < density
+
+
+def _store_from_dense(tmp_path, dense, sizes, name="st"):
+    """Build a store whose blocks cover ``dense`` with the given row counts."""
+    assert sum(sizes) == dense.shape[0]
+    w = StoreWriter(str(tmp_path / name), n_items=dense.shape[1],
+                    block_tx=max(sizes) if sizes else 1)
+    off = 0
+    for sz in sizes:
+        w.append_dense(dense[off:off + sz])
+        off += sz
+    return w.close()
+
+
+# ---------------------------------------------------------------------------
+# Packing + disk format round-trips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_items", [1, 5, 32, 40, 96])
+def test_host_packing_matches_device(n_items):
+    dense = _random_dense(23, n_items, seed=n_items)
+    packed = pack_bool_np(dense)
+    assert np.array_equal(
+        packed, np.asarray(bm.pack_bool(jnp.asarray(dense)))
+    )
+    assert np.array_equal(unpack_bool_np(packed, n_items), dense)
+
+
+@pytest.mark.parametrize(
+    "sizes",
+    [
+        [8, 8, 8, 8, 5],     # ragged final block
+        [37],                # single block
+        [8, 0, 8, 8, 0, 13], # empty blocks mid-stream
+    ],
+)
+def test_store_roundtrip_ragged(tmp_path, sizes):
+    dense = _random_dense(sum(sizes), 19, seed=1)
+    s = _store_from_dense(tmp_path, dense, sizes)
+    assert s.n_tx == sum(sizes)
+    assert s.block_sizes == sizes
+    assert np.array_equal(s.to_dense(), dense)
+    # exact global item counts maintained incrementally by the writer
+    assert np.array_equal(s.item_counts(), dense.sum(axis=0))
+    # a fresh handle reads the same manifest
+    s2 = TxStore.open(s.directory)
+    assert s2.block_sizes == sizes and s2.n_tx == s.n_tx
+
+
+def test_block_sketches_are_topk(tmp_path):
+    dense = _random_dense(40, 24, seed=2, density=0.4)
+    s = _store_from_dense(tmp_path, dense, [40])
+    meta = s.manifest.blocks[0]
+    counts = dense.sum(axis=0)
+    assert len(meta.sketch_items) <= 16
+    got = dict(zip(meta.sketch_items, meta.sketch_counts))
+    for i, c in got.items():
+        assert counts[i] == c
+    # the sketch holds the heaviest items
+    if meta.sketch_items:
+        floor = min(got.values())
+        outside = [c for i, c in enumerate(counts) if i not in got]
+        assert all(c <= floor for c in outside)
+
+
+# ---------------------------------------------------------------------------
+# FIMI .dat reader/writer
+# ---------------------------------------------------------------------------
+
+
+def test_fimi_dat_write_then_read_bitexact(tmp_path):
+    labels0 = ["39", "41", "48", "170", "999", "32"]
+    txs = [[3, 1, 2], [2, 5], [1], [5, 3, 2, 1], [0, 4]]
+    path = str(tmp_path / "a.dat")
+    write_dat(path, txs, labels=labels0)
+    got, labels = parse_dat(path)
+    want_sets = [{labels0[i] for i in tx} for tx in txs]
+    got_sets = [{labels[i] for i in tx} for tx in got]
+    assert want_sets == got_sets
+    # write∘parse is idempotent: the canonical form round-trips byte-exact
+    path2 = str(tmp_path / "b.dat")
+    write_dat(path2, got, labels=labels)
+    got2, labels2 = parse_dat(path2)
+    assert [{labels2[i] for i in tx} for tx in got2] == want_sets
+    path3 = str(tmp_path / "c.dat")
+    write_dat(path3, got2, labels=labels2)
+    assert open(path3).read() == open(path2).read()
+
+
+def test_ingest_export_roundtrip(tmp_path):
+    txs, labels = parse_dat(FIXTURE)
+    store = ingest_dat(FIXTURE, str(tmp_path / "st"), block_tx=7)
+    assert store.n_tx == len(txs)
+    assert store.item_labels == labels
+    # store content == densified transactions (dense ids are first-occurrence)
+    dense = np.zeros((len(txs), len(labels)), bool)
+    for t, tx in enumerate(txs):
+        dense[t, tx] = True
+    assert np.array_equal(store.to_dense(), dense)
+    # export restores the original labels, transaction for transaction
+    out = str(tmp_path / "out.dat")
+    export_dat(store, out)
+    got, labels2 = parse_dat(out)
+    assert [{labels2[i] for i in tx} for tx in got] == [
+        {labels[i] for i in tx} for tx in txs
+    ]
+
+
+def test_retail_tiny_fixture_frequencies(tmp_path):
+    store = ingest_dat(FIXTURE, str(tmp_path / "st"), block_tx=16)
+    labels = store.item_labels
+    counts = dict(zip(labels, store.item_counts()))
+    # 39 and 48 are the fixture's (and the real retail DB's) heavy hitters
+    assert counts["39"] > store.n_tx * 0.5
+    assert counts["48"] > store.n_tx * 0.5
+    pair = np.zeros((1, store.n_items), bool)
+    pair[0, labels.index("39")] = True
+    pair[0, labels.index("48")] = True
+    sup = streamed_itemset_supports(store, jnp.asarray(pack_bool_np(pair)))
+    assert sup[0] >= store.n_tx * 0.4  # {39,48} is frequent
+
+
+# ---------------------------------------------------------------------------
+# Streamed reader: residency budget + device assembly parity
+# ---------------------------------------------------------------------------
+
+
+def test_reader_residency_within_budget(tmp_path):
+    dense = _random_dense(64, 40, seed=3)
+    s = _store_from_dense(tmp_path, dense, [16, 16, 16, 16])
+    r = BlockReader(s, host_budget_blocks=2)
+    rows = []
+    for _, off, dev, n in r.device_blocks():
+        rows.append(np.asarray(dev))
+    assert np.array_equal(np.concatenate(rows), pack_bool_np(dense))
+    # double buffering holds at most two blocks: high-water <= budget
+    assert 0 < r.peak_host_bytes <= r.budget_bytes
+    with pytest.raises(ValueError):
+        BlockReader(s, host_budget_blocks=1)
+
+
+def test_reader_budget_enforced(tmp_path):
+    """A reader that somehow over-holds raises instead of silently growing."""
+    dense = _random_dense(32, 16, seed=4)
+    s = _store_from_dense(tmp_path, dense, [8, 8, 8, 8])
+    r = BlockReader(s, host_budget_blocks=2)
+    r.budget_bytes = 1  # simulate a misconfigured (too small) byte budget
+    with pytest.raises(HostBudgetExceeded):
+        list(r.device_blocks())
+
+
+@pytest.mark.parametrize(
+    "n_tx,P,sizes",
+    [
+        (37, 2, [8, 8, 8, 8, 5]),    # ragged last + truncation (37 % 2 = 1)
+        (32, 4, [32]),               # single block
+        (29, 3, [8, 0, 8, 8, 0, 5]), # empty blocks + truncation
+    ],
+)
+def test_to_device_shards_matches_shard_db(tmp_path, n_tx, P, sizes):
+    dense = _random_dense(n_tx, 19, seed=n_tx + P)
+    s = _store_from_dense(tmp_path, dense, sizes)
+    got = to_device_shards(s, P)
+    want = fimi.shard_db(dense, P)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gather_rows_with_duplicates(tmp_path):
+    dense = _random_dense(30, 19, seed=5)
+    s = _store_from_dense(tmp_path, dense, [8, 8, 8, 6])
+    idx = np.array([29, 0, 7, 8, 7, 15, 29, 29])
+    got = gather_rows(s, idx)
+    assert np.array_equal(got, pack_bool_np(dense)[idx])
+
+
+# ---------------------------------------------------------------------------
+# Off-disk Thm 6.1 sample: bit-exactness + estimation-error bound
+# ---------------------------------------------------------------------------
+
+
+def test_sample_rows_bitexact_vs_inram(tmp_path):
+    dense = _random_dense(96, 24, seed=6)
+    s = _store_from_dense(tmp_path, dense, [32, 32, 32])
+    flat = np.asarray(bm.pack_bool(jnp.asarray(dense)))
+    for seed in (0, 7):
+        key = jax.random.PRNGKey(seed)
+        got = sample_rows(s, key, 40)
+        want = bm.sample_transactions(jnp.asarray(flat), key, 40, 96)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_offdisk_sample_meets_thm61_bound(tmp_path):
+    """Item supports estimated from the off-disk sample stay within the
+    Thm 6.1 ε implied by the drawn sample size (same bound, same sampler,
+    as the in-RAM path — the rows are bit-identical)."""
+    p = IBMParams(n_tx=2048, n_items=24, n_patterns=8, avg_pattern_len=5,
+                  avg_tx_len=8, seed=9)
+    store = write_ibm_store(p, str(os.path.join(str(tmp_path), "ibm")),
+                            block_tx=256)
+    eps, delta = 0.05, 0.1
+    n = min(sampling.db_sample_size(eps, delta), store.n_tx)
+    rows = sample_rows(store, jax.random.PRNGKey(2), n)
+    samp = unpack_bool_np(np.asarray(rows), store.n_items)
+    est_rel = samp.sum(axis=0) / n
+    true_rel = store.item_counts() / store.n_tx
+    # the implied eps at the actually-drawn n (n was clipped to |D|)
+    eps_eff = np.sqrt(np.log(2.0 / delta) / (2.0 * n))
+    assert np.abs(est_rel - true_rel).max() <= eps_eff
+
+
+def test_streamed_itemset_supports_exact(tmp_path):
+    dense = _random_dense(60, 24, seed=8, density=0.35)
+    s = _store_from_dense(tmp_path, dense, [16, 16, 0, 16, 12])
+    masks_dense = _random_dense(9, 24, seed=9, density=0.12)
+    masks_dense[0] = False  # the empty itemset: contained in every row
+    got = streamed_itemset_supports(
+        s, jnp.asarray(pack_bool_np(masks_dense))
+    )
+    want = np.array([
+        (~(m[None, :] & ~dense).any(axis=1)).sum() for m in masks_dense
+    ])
+    assert np.array_equal(got, want)
+    assert got[0] == 60
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core mining parity: fimi.run(store) == fimi.run(dense), bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _fimi_params():
+    return fimi.FimiParams(
+        min_support_rel=0.1, n_db_sample=128, n_fi_sample=256,
+        eclat=eclat.EclatConfig(max_out=1 << 14, max_stack=2048,
+                                frontier_size=8),
+    )
+
+
+@pytest.mark.parametrize(
+    "sizes,P",
+    [
+        ([64, 64, 64, 64, 44], 4),   # ragged last block
+        ([300], 4),                  # single block
+        ([64, 0, 64, 64, 64, 0, 44], 2),  # empty blocks mid-stream
+    ],
+)
+def test_fimi_run_store_parity(tmp_path, sizes, P):
+    p = IBMParams(n_tx=sum(sizes), n_items=24, n_patterns=8,
+                  avg_pattern_len=5, avg_tx_len=8, seed=3)
+    dense = generate_dense(p)
+    s = _store_from_dense(tmp_path, dense, sizes)
+    key = jax.random.PRNGKey(0)
+    ref = fimi.run(fimi.shard_db(dense, P), 24, _fimi_params(), key,
+                   materialize=True)
+    got = fimi.run(s, None, _fimi_params(), key, materialize=True, P=P)
+    assert len(ref.fi_dict) > 0
+    assert got.fi_dict == ref.fi_dict
+
+
+def test_fimi_run_store_requires_P(tmp_path):
+    dense = _random_dense(32, 16, seed=10)
+    s = _store_from_dense(tmp_path, dense, [32])
+    with pytest.raises(ValueError, match="P"):
+        fimi.run(s, None, _fimi_params(), jax.random.PRNGKey(0))
+
+
+def test_planner_store_parity(tmp_path):
+    from repro.cluster import PlannerParams, plan
+
+    p = IBMParams(n_tx=300, n_items=24, n_patterns=8, avg_pattern_len=5,
+                  avg_tx_len=8, seed=3)
+    dense = generate_dense(p)
+    s = _store_from_dense(tmp_path, dense, [64, 64, 64, 64, 44])
+    pp = PlannerParams(min_support_rel=0.1, n_db_sample=128, n_fi_sample=256)
+    key = jax.random.PRNGKey(0)
+    a = plan(fimi.shard_db(dense, 4), 24, pp, key)
+    b = plan(s, None, pp, key, P=4)
+    assert np.array_equal(a.assignment, b.assignment)
+    assert np.array_equal(a.est_sizes, b.est_sizes)
+    assert np.array_equal(a.sample_masks, b.sample_masks)
+    assert np.array_equal(a.sample_item_rel, b.sample_item_rel)
+    assert a.scheduler_used == b.scheduler_used
+    assert a.n_db_sample == b.n_db_sample
+
+
+def test_cluster_execute_from_store_plan(tmp_path):
+    """Executor fed the off-disk plan + block-assembled shards stays exact."""
+    from repro import cluster
+
+    p = IBMParams(n_tx=240, n_items=24, n_patterns=8, avg_pattern_len=5,
+                  avg_tx_len=8, seed=5)
+    dense = generate_dense(p)
+    s = _store_from_dense(tmp_path, dense, [64, 64, 64, 48])
+    key = jax.random.PRNGKey(0)
+    params = cluster.ClusterParams(
+        planner=cluster.PlannerParams(
+            min_support_rel=0.12, n_db_sample=128, n_fi_sample=256
+        ),
+        eclat=eclat.EclatConfig(max_out=1 << 14, max_stack=2048,
+                                frontier_size=8),
+    )
+    plan = cluster.plan(s, None, params.planner, key, P=4)
+    shards = to_device_shards(s, 4)
+    res = cluster.execute(shards, 24, params, key, plan=plan)
+    minsup = int(np.ceil(0.12 * 240))
+    oracle = eclat.brute_force_fis(dense, minsup)
+    assert res.table.to_dict() == oracle
+
+
+# ---------------------------------------------------------------------------
+# IBM spill + window spill
+# ---------------------------------------------------------------------------
+
+
+def test_ibm_spill_matches_blocked_generation(tmp_path):
+    p = IBMParams(n_tx=100, n_items=24, n_patterns=8, avg_pattern_len=5,
+                  avg_tx_len=8, seed=3)
+    s = write_ibm_store(p, str(tmp_path / "ibm"), block_tx=32)
+    want = np.concatenate(list(generate_blocks(p, 32)))
+    assert s.block_sizes == [32, 32, 32, 4]
+    assert np.array_equal(s.to_dense(), want)
+
+
+def test_generate_blocks_single_block_is_generate_dense():
+    p = IBMParams(n_tx=64, n_items=24, n_patterns=8, avg_pattern_len=5,
+                  avg_tx_len=8, seed=11)
+    blocks = list(generate_blocks(p, 64))
+    assert len(blocks) == 1
+    assert np.array_equal(blocks[0], generate_dense(p))
+
+
+def test_window_spill_persists_expired_blocks(tmp_path):
+    from repro.stream import StreamParams, StreamingMiner
+
+    rng = np.random.default_rng(1)
+    sp = StreamParams(
+        n_blocks=3, block_tx=16, min_support_rel=0.3,
+        spill_dir=str(tmp_path / "hist"),
+    )
+
+    def oracle_mine(window, abs_minsup):
+        return eclat.brute_force_fis(
+            np.asarray(window.to_bitmap_db().dense()), abs_minsup
+        )
+
+    m = StreamingMiner(sp, 12, mine_fn=oracle_mine)
+    blocks = [rng.random((16, 12)) < 0.3 for _ in range(7)]
+    for b in blocks:
+        m.admit(b)
+    hist = m.spill.store()
+    # 7 admitted into a 3-block ring: blocks 0..3 expired, in arrival order
+    assert hist.n_blocks == 4 and hist.n_tx == 64
+    want = np.concatenate([pack_bool_np(b) for b in blocks[:4]])
+    assert np.array_equal(hist.read_all_packed(), want)
+    # the spilled history is itself a minable store
+    got = fimi.run(hist, None, _fimi_params(), jax.random.PRNGKey(0),
+                   materialize=True, P=2)
+    ref = fimi.run(fimi.shard_db(np.concatenate(blocks[:4]), 2), 12,
+                   _fimi_params(), jax.random.PRNGKey(0), materialize=True)
+    assert got.fi_dict == ref.fi_dict
+
+
+def test_window_spill_resumes_existing_history(tmp_path):
+    """A restarted stream appends to the spill store instead of resetting it."""
+    from repro.stream.window import SlidingWindow, WindowSpill
+
+    rng = np.random.default_rng(2)
+    blocks = [rng.random((8, 12)) < 0.3 for _ in range(6)]
+    packed = [pack_bool_np(b) for b in blocks]
+
+    def run_session(blks):
+        spill = WindowSpill(str(tmp_path / "hist"), 8, 12)
+        win = SlidingWindow.empty(2, 8, 12)
+        for b in blks:
+            win, expired = win.admit(jnp.asarray(pack_bool_np(b)))
+            if expired is not None:
+                spill.append(expired)
+        return spill.store()
+
+    h1 = run_session(blocks[:4])          # ring of 2 -> blocks 0,1 expire
+    assert h1.n_blocks == 2
+    h2 = run_session(blocks[3:])          # fresh session, same directory
+    assert h2.n_blocks == 3               # resumed: 2 old + 1 newly expired
+    want = np.concatenate([packed[0], packed[1], packed[3]])
+    assert np.array_equal(h2.read_all_packed(), want)
+    # geometry mismatch is refused, never silently reset
+    from repro.store.store import StoreWriter
+
+    with pytest.raises(ValueError, match="resume"):
+        StoreWriter(str(tmp_path / "hist"), n_items=16, block_tx=8,
+                    resume=True)

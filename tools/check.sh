@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
 # CI gate (also the local pre-push check): tier-1 tests + smoke benchmarks
-# + the 4-host-device distributed-mining parity gate.
+# + the 4-host-device distributed-mining parity gate + the out-of-core
+# store parity gate.
 #
 #   tools/check.sh            # everything
 #   tools/check.sh --tests    # tier-1 pytest only
 #   tools/check.sh --bench    # smoke benchmarks only
 #   tools/check.sh --cluster  # 4-device cluster parity only
+#   tools/check.sh --store    # out-of-core store parity only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -13,12 +15,14 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 run_tests=1
 run_bench=1
 run_cluster=1
+run_store=1
 case "${1:-}" in
-  --tests) run_bench=0; run_cluster=0 ;;
-  --bench) run_tests=0; run_cluster=0 ;;
-  --cluster) run_tests=0; run_bench=0 ;;
+  --tests) run_bench=0; run_cluster=0; run_store=0 ;;
+  --bench) run_tests=0; run_cluster=0; run_store=0 ;;
+  --cluster) run_tests=0; run_bench=0; run_store=0 ;;
+  --store) run_tests=0; run_bench=0; run_cluster=0 ;;
   "") ;;
-  *) echo "usage: tools/check.sh [--tests|--bench|--cluster]" >&2; exit 2 ;;
+  *) echo "usage: tools/check.sh [--tests|--bench|--cluster|--store]" >&2; exit 2 ;;
 esac
 
 if [[ $run_tests -eq 1 ]]; then
@@ -27,7 +31,7 @@ if [[ $run_tests -eq 1 ]]; then
 fi
 
 if [[ $run_bench -eq 1 ]]; then
-  echo "== smoke benchmarks (kernels + serve + stream + cluster) =="
+  echo "== smoke benchmarks (kernels + serve + stream + cluster + io) =="
   python -m benchmarks.run --smoke
 fi
 
@@ -37,6 +41,15 @@ if [[ $run_cluster -eq 1 ]]; then
   # (launch/host_devices.py); --parity exits non-zero on any FI mismatch
   python -m repro.launch.cluster_mine --devices 4 -P 4 \
     --db T0.5I0.024P8PL5TL8 --support 0.08 --parity
+fi
+
+if [[ $run_store -eq 1 ]]; then
+  echo "== out-of-core store parity (block-streamed mine vs dense in-RAM) =="
+  # spills the IBM DB to a store of 8x64tx blocks — bigger than the 2-block
+  # host budget — mines it through the double-buffered reader, and requires
+  # a bit-exact FITable vs the dense path (exits non-zero on any mismatch)
+  python -m repro.launch.mine --db T0.5I0.024P8PL5TL8 --support 0.08 \
+    --store "$(mktemp -d)" --blocktx 64 --parity
 fi
 
 echo "check.sh: OK"
