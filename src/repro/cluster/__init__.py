@@ -8,7 +8,15 @@
               vmap simulation), merged into one global :class:`FITable`.
 ``rebalance`` Dynamic correction: per-round load telemetry, bounded donation
               of unexplored PBEC subtrees from overloaded to idle shards.
+``checkpoint`` Fault tolerance: atomic round-granular checkpoints (CRC32C-
+              guarded payload, plan-hash binding) enabling bit-exact resume
+              of an interrupted distributed mine.
 """
+from repro.cluster.checkpoint import (  # noqa: F401
+    CheckpointError,
+    RoundState,
+    plan_fingerprint,
+)
 from repro.cluster.executor import (  # noqa: F401
     ClusterParams,
     ClusterReport,

@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core import bitmap as bm
 from repro.core import eclat, fimi, phases
+from repro.cluster import checkpoint as checkpoint_mod
 from repro.cluster import planner as planner_mod
 from repro.cluster import rebalance as rebalance_mod
 
@@ -180,8 +181,21 @@ def execute(
     spmd=None,
     mesh=None,
     plan: Optional[planner_mod.MiningPlan] = None,
+    checkpoint_dir: Optional[str] = None,
+    resume: bool = False,
+    round_hook: Optional[Callable[[int], None]] = None,
 ) -> ClusterResult:
-    """Run the full distributed pipeline; returns table + plan + telemetry."""
+    """Run the full distributed pipeline; returns table + plan + telemetry.
+
+    Fault tolerance (DESIGN.md, "Failure model"): with ``checkpoint_dir``
+    set, the complete inter-round state is persisted atomically after every
+    round; ``resume=True`` restores the latest checkpoint (plan-hash
+    guarded) and replays only the remaining rounds, **bit-exact** with the
+    uninterrupted run — round keys are derived from the round index, the
+    chunk width from the plan, and donations from the restored ledger.
+    ``round_hook(r)`` is called after round ``r`` is checkpointed; the
+    fault harness raises from it to simulate a mid-run death.
+    """
     P, T, IW = tx_shards.shape
     spmd, mesh, backend = _auto_spmd(P, spmd, mesh)
     phase_ms = {"plan": 0.0, "exchange": 0.0, "mine": 0.0, "merge": 0.0}
@@ -250,7 +264,28 @@ def execute(
     mine_overflow = 0
     anc_supports: Optional[np.ndarray] = None
 
+    plan_hash = (
+        checkpoint_mod.plan_fingerprint(plan) if checkpoint_dir else ""
+    )
     r = 0
+    if resume and checkpoint_dir:
+        state = checkpoint_mod.load(checkpoint_dir, plan_hash=plan_hash)
+        if state is not None:
+            # chunk/C_round above are pure functions of the plan, so the
+            # restored queues slot into the same static-shape executables
+            r = state.round_index
+            queues = state.queues
+            if state.fi_masks.shape[0]:
+                fi_masks = [np.asarray(state.fi_masks, np.uint32)]
+                fi_supports = [np.asarray(state.fi_supports, np.int64)]
+            anc_supports = state.anc_supports
+            ledger.observed[:] = state.observed
+            ledger.est_mined[:] = state.est_mined
+            exchange_overflow = state.exchange_overflow
+            mine_overflow = state.mine_overflow
+            rounds = list(state.rounds)
+            donations = list(state.donations)
+
     while any(queues) and r < params.max_rounds:
         take = [q[:chunk] for q in queues]
         queues = [q[chunk:] for q in queues]
@@ -348,6 +383,32 @@ def execute(
             )
         )
         r += 1
+        if checkpoint_dir:
+            checkpoint_mod.save(
+                checkpoint_dir,
+                checkpoint_mod.RoundState(
+                    round_index=r,
+                    queues=queues,
+                    fi_masks=(
+                        np.concatenate(fi_masks, axis=0)
+                        if fi_masks else np.zeros((0, IW), np.uint32)
+                    ),
+                    fi_supports=(
+                        np.concatenate(fi_supports, axis=0)
+                        if fi_supports else np.zeros((0,), np.int64)
+                    ),
+                    anc_supports=anc_supports,
+                    observed=ledger.observed,
+                    est_mined=ledger.est_mined,
+                    exchange_overflow=exchange_overflow,
+                    mine_overflow=mine_overflow,
+                    rounds=rounds,
+                    donations=donations,
+                ),
+                plan_hash,
+            )
+        if round_hook is not None:
+            round_hook(r - 1)
     assert not any(queues), "max_rounds exhausted with classes still queued"
 
     if params.strict and (exchange_overflow or mine_overflow):

@@ -10,10 +10,17 @@ or real mesh devices when present, and reports what a cluster operator needs:
   * a speedup-vs-devices curve (``--curve 1,2,4``) in modeled makespan
     (Σ_r max_p trips — the barrier-aware metric) and wall time,
   * exact parity against single-device ``fimi.run`` (``--parity``; exits
-    non-zero on any itemset/support mismatch — the CI gate uses this).
+    non-zero on any itemset/support mismatch — the CI gate uses this),
+  * fault tolerance: ``--checkpoint DIR`` persists the inter-round state
+    atomically after every round; ``--resume`` restarts from the latest
+    checkpoint and the finished run is bit-exact with an uninterrupted
+    one; ``--kill-after-round R`` dies (exit 0) right after round R's
+    checkpoint — the fault-injection gate pairs it with ``--resume
+    --parity``.
 
   python -m repro.launch.cluster_mine --db T2I0.048P50PL10TL16 --support 0.1 \
-      -P 4 --devices 4 --parity [--curve 1,2,4] [--no-rebalance]
+      -P 4 --devices 4 --parity [--curve 1,2,4] [--no-rebalance] \
+      [--checkpoint DIR [--resume | --kill-after-round R]]
 """
 from __future__ import annotations
 
@@ -56,6 +63,11 @@ def run_once(dense, n_items, P, args, eclat_mod, fimi_mod, cluster,
         skew_threshold=args.skew,
     )
     key = jax.random.PRNGKey(args.seed)
+    ck = dict(
+        checkpoint_dir=getattr(args, "checkpoint", "") or None,
+        resume=getattr(args, "resume", False),
+        round_hook=_kill_hook(args),
+    )
     t0 = time.perf_counter()
     if store is not None:
         from repro.store.reader import to_device_shards
@@ -64,15 +76,30 @@ def run_once(dense, n_items, P, args, eclat_mod, fimi_mod, cluster,
         t1 = time.perf_counter()
         shards = jax.block_until_ready(to_device_shards(store, P))
         t2 = time.perf_counter()
-        res = cluster.execute(shards, n_items, params, key, plan=plan)
+        res = cluster.execute(shards, n_items, params, key, plan=plan, **ck)
         # execute() saw a precomputed plan (plan≈0): charge the off-disk
         # planning + block-streamed assembly where they actually happened
         res.report.phase_ms["plan"] = (t1 - t0) * 1e3
         res.report.phase_ms["assemble"] = (t2 - t1) * 1e3
     else:
         shards = fimi_mod.shard_db(dense, P)
-        res = cluster.execute(shards, n_items, params, key)
+        res = cluster.execute(shards, n_items, params, key, **ck)
     return res, time.perf_counter() - t0
+
+
+def _kill_hook(args):
+    """Round hook that simulates a mid-run death for the fault gate."""
+    kill_at = getattr(args, "kill_after_round", -1)
+    if kill_at < 0:
+        return None
+
+    def hook(r: int) -> None:
+        if r >= kill_at:
+            print(f"KILLED after round {r} (checkpoint saved) — "
+                  f"rerun with --resume to finish")
+            sys.exit(0)
+
+    return hook
 
 
 def main():
@@ -108,6 +135,16 @@ def main():
                     help="comma-separated device counts for a speedup curve")
     ap.add_argument("--parity", action="store_true",
                     help="verify exact FI parity vs single-device fimi.run")
+    ap.add_argument("--checkpoint", default="",
+                    help="persist inter-round state to this dir after "
+                         "every round (atomic, CRC32C-guarded)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restart from the latest checkpoint in "
+                         "--checkpoint (bit-exact with an unbroken run)")
+    ap.add_argument("--kill-after-round", type=int, default=-1,
+                    dest="kill_after_round", metavar="R",
+                    help="simulate a crash: exit 0 right after round R's "
+                         "checkpoint is saved (fault-injection gate)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

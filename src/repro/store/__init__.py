@@ -9,16 +9,34 @@
              streamed exact support counting.
 ``fimi_io``  Standard FIMI ``.dat`` parse / write / streamed ingest with
              dense-id remapping and inverse label map.
+``checksum`` CRC32C (Castagnoli) in vectorized numpy — per-block payload
+             integrity, verified on every read.
+``fsck``     Scan / repair / quarantine: classifies every damage class of
+             the failure model, adopts a crashed writer's residue.
+``retry``    Bounded exponential-backoff :class:`RetryPolicy` for disk
+             reads and host→device transfers (injectable clock/sleep).
 """
+from repro.store.checksum import crc32c  # noqa: F401
 from repro.store.fimi_io import (  # noqa: F401
     export_dat,
     ingest_dat,
     parse_dat,
     write_dat,
 )
+from repro.store.fsck import Damage, FsckReport, fsck  # noqa: F401
+from repro.store.retry import (  # noqa: F401
+    NO_RETRY,
+    RetriesExhausted,
+    RetryPolicy,
+)
 from repro.store.store import (  # noqa: F401
+    ChecksumMismatchError,
     Manifest,
+    MissingBlockError,
+    StaleManifestError,
+    StoreIntegrityError,
     StoreWriter,
+    TruncatedBlockError,
     TxStore,
     pack_bool_np,
     unpack_bool_np,
@@ -28,6 +46,7 @@ from repro.store.store import (  # noqa: F401
 # The read side imports jax; the write path above is numpy-only and must
 # stay importable on hosts that never touch a device (PEP 562 lazy load).
 _READER_EXPORTS = (
+    "BlockReadError",
     "BlockReader",
     "HostBudgetExceeded",
     "gather_rows",

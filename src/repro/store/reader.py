@@ -23,6 +23,7 @@ On top of it:
 """
 from __future__ import annotations
 
+import os
 import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import Iterator, Optional, Tuple
@@ -31,13 +32,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.store.store import TxStore
+from repro.store.retry import RetriesExhausted, RetryPolicy
+from repro.store.store import StoreIntegrityError, TxStore
 
 _U32 = jnp.uint32
 
 
 class HostBudgetExceeded(RuntimeError):
     """The reader would hold more host bytes than the configured budget."""
+
+
+class BlockReadError(RuntimeError):
+    """A block failed to read/transfer; the message names block and path."""
+
+
+#: Errors that already carry their own block context (or are the budget
+#: invariant itself) — re-raised as-is at the consumer, never wrapped.
+_PASSTHROUGH = (StoreIntegrityError, RetriesExhausted, HostBudgetExceeded)
 
 
 class BlockReader:
@@ -47,9 +58,24 @@ class BlockReader:
     largest block; double buffering needs 2 (read-ahead + in-flight).  The
     observed high-water mark is exposed as :attr:`peak_host_bytes` — the
     IO benchmark asserts it stays O(block) while the database grows.
+
+    Fault behavior (DESIGN.md, "Failure model"): disk reads and the
+    ``device_put`` dispatch run under ``retry`` (bounded exponential
+    backoff, ``OSError`` only by default).  A failure on the prefetch
+    thread is raised to the consumer at its next ``__next__`` — typed
+    integrity errors pass through unchanged, anything else is wrapped in
+    :class:`BlockReadError` naming the failing block index and path — and
+    the worker thread is joined before the error propagates, so an
+    aborted stream never leaks a thread or an unretrieved future.
     """
 
-    def __init__(self, store: TxStore, host_budget_blocks: int = 2):
+    def __init__(
+        self,
+        store: TxStore,
+        host_budget_blocks: int = 2,
+        *,
+        retry: RetryPolicy = RetryPolicy(),
+    ):
         if host_budget_blocks < 2:
             raise ValueError(
                 "double buffering needs a host budget of >= 2 blocks "
@@ -59,12 +85,26 @@ class BlockReader:
         self.host_budget_blocks = host_budget_blocks
         self.budget_bytes = host_budget_blocks * max(store.max_block_bytes, 1)
         self.peak_host_bytes = 0
+        self.retry = retry
+        self.read_attempts = 0      # telemetry: total read attempts made
         self._live: dict = {}
         self._lock = threading.Lock()
 
     # -- residency accounting -------------------------------------------------
+    def _block_path(self, i: int) -> str:
+        return os.path.join(
+            self.store.directory, self.store.manifest.blocks[i].file
+        )
+
     def _read_host(self, i: int) -> np.ndarray:
-        arr = self.store.read_block(i)
+        def attempt() -> np.ndarray:
+            with self._lock:
+                self.read_attempts += 1
+            return self.store.read_block(i)
+
+        arr = self.retry.call(
+            attempt, describe=f"read block {i} ({self._block_path(i)})"
+        )
         with self._lock:
             self._live[i] = arr.nbytes
             live = sum(self._live.values())
@@ -89,23 +129,46 @@ class BlockReader:
         The next block's disk read runs on a worker thread and its
         ``device_put`` is dispatched before the consumer finishes the
         current one — the overlap that hides I/O behind device sweeps.
+        A prefetch failure raises here, at the iteration that needed the
+        block, with the block's index/path in the message.
         """
         n = self.store.n_blocks
         if n == 0:
             return
         off = 0
-        with ThreadPoolExecutor(max_workers=1) as ex:
-            fut = ex.submit(self._read_host, 0)
+        ex = ThreadPoolExecutor(max_workers=1)
+        fut = ex.submit(self._read_host, 0)
+        try:
             for i in range(n):
-                arr = fut.result()
+                try:
+                    arr = fut.result()
+                except _PASSTHROUGH:
+                    raise
+                except Exception as e:
+                    raise BlockReadError(
+                        f"prefetch of block {i} ({self._block_path(i)}) "
+                        f"failed: {e!r}"
+                    ) from e
                 if i + 1 < n:
                     fut = ex.submit(self._read_host, i + 1)
-                dev = jax.device_put(arr)   # async dispatch
+                dev = self.retry.call(
+                    lambda: jax.device_put(arr),   # async dispatch
+                    describe=f"device_put block {i}",
+                )
                 n_rows = int(arr.shape[0])
                 del arr  # drop the host reference; the transfer owns a copy
                 yield i, off, dev, n_rows
                 self._release(i)
                 off += n_rows
+        finally:
+            # join the worker before any exception propagates: no leaked
+            # thread, and the in-flight future's error (if any) is
+            # retrieved so it cannot surface later as a bare warning
+            ex.shutdown(wait=True)
+            if not fut.cancelled():
+                fut.exception()
+            with self._lock:
+                self._live.clear()
 
 
 # ---------------------------------------------------------------------------

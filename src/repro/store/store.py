@@ -33,15 +33,60 @@ from typing import Iterator, List, Optional, Sequence
 
 import numpy as np
 
+from repro.store.checksum import crc32c
+
 MANIFEST_NAME = "manifest.json"
 BLOCK_DIR = "blocks"
-FORMAT = "txstore-v1"
+FORMAT = "txstore-v2"           # written by this code: per-block crc32c
+LEGACY_FORMATS = ("txstore-v1",)  # still readable (no checksums to verify)
 WORD_BITS = 32
 SKETCH_K = 16  # per-block item-frequency sketch width
 
 
+# ---------------------------------------------------------------------------
+# Integrity errors (DESIGN.md, "Failure model")
+# ---------------------------------------------------------------------------
+
+
+class StoreIntegrityError(RuntimeError):
+    """The store's on-disk state contradicts its manifest.
+
+    Every subclass names a *distinct, actionable* damage class — the reader
+    raises these instead of ever returning silently wrong rows, and
+    :mod:`repro.store.fsck` classifies a whole store with them.
+    """
+
+
+class MissingBlockError(StoreIntegrityError):
+    """A manifest-indexed block file does not exist on disk."""
+
+
+class TruncatedBlockError(StoreIntegrityError):
+    """A block file is shorter than its payload (torn/partial write)."""
+
+
+class ChecksumMismatchError(StoreIntegrityError):
+    """A block payload fails its CRC32C (bit rot / silent corruption)."""
+
+
+class StaleManifestError(StoreIntegrityError):
+    """Manifest metadata and block payload disagree structurally
+    (hand-edited or out-of-date manifest: wrong shape, dtype, or byte
+    count for a payload that otherwise reads cleanly)."""
+
+
 def n_words(n: int) -> int:
     return (n + WORD_BITS - 1) // WORD_BITS
+
+
+def block_file_index(rel_or_name: str) -> Optional[int]:
+    """The NNNNNN of a ``block_NNNNNN.npy`` file name (None if not one)."""
+    name = os.path.basename(rel_or_name)
+    if name.startswith("block_") and name.endswith(".npy"):
+        digits = name[len("block_"):-len(".npy")]
+        if digits.isdigit():
+            return int(digits)
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -87,12 +132,19 @@ def unpack_bool_np(packed: np.ndarray, n: int) -> np.ndarray:
 
 @dataclasses.dataclass(frozen=True)
 class BlockMeta:
-    """One block's manifest entry."""
+    """One block's manifest entry.
+
+    ``n_bytes``/``crc32c`` are the v2 integrity fields (payload byte size
+    and CRC32C of the packed rows); ``None`` on blocks indexed by a legacy
+    v1 manifest, which read without verification.
+    """
 
     file: str               # relative path under the store dir
     n_tx: int               # rows in this block (0 = empty block)
     sketch_items: List[int]     # top-K item ids by in-block frequency
     sketch_counts: List[int]    # their in-block supports
+    n_bytes: Optional[int] = None   # packed payload bytes (v2)
+    crc32c: Optional[int] = None    # CRC32C of the payload bytes (v2)
 
     def as_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -104,6 +156,8 @@ class BlockMeta:
             n_tx=int(d["n_tx"]),
             sketch_items=[int(x) for x in d["sketch_items"]],
             sketch_counts=[int(x) for x in d["sketch_counts"]],
+            n_bytes=None if d.get("n_bytes") is None else int(d["n_bytes"]),
+            crc32c=None if d.get("crc32c") is None else int(d["crc32c"]),
         )
 
 
@@ -135,7 +189,7 @@ class Manifest:
 
     @classmethod
     def from_json(cls, d: dict) -> "Manifest":
-        if d.get("format") != FORMAT:
+        if d.get("format") not in (FORMAT,) + LEGACY_FORMATS:
             raise ValueError(f"not a {FORMAT} manifest: {d.get('format')!r}")
         return cls(
             n_tx=int(d["n_tx"]),
@@ -147,6 +201,20 @@ class Manifest:
             item_labels=d.get("item_labels"),
             source=d.get("source", ""),
         )
+
+
+def write_manifest(directory: str, manifest: Manifest) -> None:
+    """Atomically publish a manifest (write-temp + ``os.replace``).
+
+    Shared by the writer, fsck's repairs, and the cluster checkpoint —
+    readers never observe a torn metadata file.
+    """
+    path = os.path.join(directory, MANIFEST_NAME)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest.as_json(), f, indent=1)
+        f.write("\n")
+    os.replace(tmp, path)
 
 
 # ---------------------------------------------------------------------------
@@ -168,7 +236,12 @@ class StoreWriter:
     ``resume=True`` re-opens an existing store and keeps appending after its
     last block (geometry must match) instead of resetting it — the window
     spill uses this so a restarted stream extends its history rather than
-    silently destroying it.
+    silently destroying it.  Resume first runs :func:`repro.store.fsck.fsck`
+    in repair mode to clean up after a crashed writer: block files appended
+    after the last manifest flush are deterministically **adopted** (their
+    counts and checksums recomputed into the manifest) and a torn trailing
+    payload is deleted, so the crash window between ``np.save`` and the
+    manifest publish can neither lose indexed data nor miscount it.
     """
 
     def __init__(
@@ -187,6 +260,19 @@ class StoreWriter:
         os.makedirs(os.path.join(directory, BLOCK_DIR), exist_ok=True)
         manifest_path = os.path.join(directory, MANIFEST_NAME)
         if resume and os.path.exists(manifest_path):
+            from repro.store.fsck import fsck as run_fsck
+
+            # adopt blocks a crashed writer saved but never indexed, delete
+            # torn partial payloads — then the manifest below is trustworthy.
+            # Shallow scan: one stat per indexed block, payload reads only
+            # for orphans, so restarting a long stream spill stays cheap.
+            rep = run_fsck(directory, repair=True, deep=False)
+            if not rep.clean:
+                raise StoreIntegrityError(
+                    f"cannot resume {directory}: unrepaired damage —\n"
+                    f"{rep.summary()}\n"
+                    f"run repro.launch.fsck --quarantine to salvage it"
+                )
             with open(manifest_path) as f:
                 self.manifest = Manifest.from_json(json.load(f))
             if (self.manifest.n_items != int(n_items)
@@ -198,6 +284,11 @@ class StoreWriter:
                     f"({n_items}, {block_tx})"
                 )
             self._counts = np.asarray(self.manifest.item_counts, np.int64)
+            self._next_idx = 1 + max(
+                (i for i in (block_file_index(b.file)
+                             for b in self.manifest.blocks) if i is not None),
+                default=-1,
+            )
             return
         self.manifest = Manifest(
             n_tx=0,
@@ -210,6 +301,7 @@ class StoreWriter:
             source=source,
         )
         self._counts = np.zeros(int(n_items), np.int64)
+        self._next_idx = 0
         self._flush()
 
     # -- append ---------------------------------------------------------------
@@ -233,7 +325,12 @@ class StoreWriter:
 
     def _append(self, packed: np.ndarray, item_counts: np.ndarray) -> int:
         bidx = len(self.manifest.blocks)
-        rel = os.path.join(BLOCK_DIR, f"block_{bidx:06d}.npy")
+        # file names use a monotone counter, not len(blocks): after fsck
+        # quarantines a mid-store block the two diverge, and reusing a name
+        # would overwrite a payload the manifest still indexes
+        rel = os.path.join(BLOCK_DIR, f"block_{self._next_idx:06d}.npy")
+        self._next_idx += 1
+        packed = np.ascontiguousarray(packed)
         np.save(os.path.join(self.directory, rel), packed, allow_pickle=False)
         counts = np.asarray(item_counts, np.int64)
         k = min(SKETCH_K, self.manifest.n_items)
@@ -245,6 +342,8 @@ class StoreWriter:
                 n_tx=int(packed.shape[0]),
                 sketch_items=[int(i) for i in top],
                 sketch_counts=[int(counts[i]) for i in top],
+                n_bytes=int(packed.nbytes),
+                crc32c=crc32c(packed),
             )
         )
         self.manifest.n_tx += int(packed.shape[0])
@@ -255,12 +354,7 @@ class StoreWriter:
 
     def _flush(self) -> None:
         self.manifest.item_counts = [int(c) for c in self._counts]
-        path = os.path.join(self.directory, MANIFEST_NAME)
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self.manifest.as_json(), f, indent=1)
-            f.write("\n")
-        os.replace(tmp, path)  # atomic publish, readers never see a torn file
+        write_manifest(self.directory, self.manifest)
 
     def close(self) -> "TxStore":
         self._flush()
@@ -279,17 +373,25 @@ class TxStore:
     Block payloads are read on demand (:meth:`read_block`) by the streamed
     consumers in :mod:`repro.store.reader`; nothing here ever materializes
     more than one block.
+
+    Every block read is verified against the manifest's integrity fields
+    (payload byte size + CRC32C) and raises a typed
+    :class:`StoreIntegrityError` on any disagreement — never a silently
+    wrong count.  ``verify=False`` skips the CRC pass (the IO benchmark's
+    overhead baseline); legacy v1 manifests carry no checksums and read
+    unverified either way.
     """
 
-    def __init__(self, directory: str, manifest: Manifest):
+    def __init__(self, directory: str, manifest: Manifest, verify: bool = True):
         self.directory = directory
         self.manifest = manifest
+        self.verify = verify
 
     @classmethod
-    def open(cls, directory: str) -> "TxStore":
+    def open(cls, directory: str, verify: bool = True) -> "TxStore":
         path = os.path.join(directory, MANIFEST_NAME)
         with open(path) as f:
-            return cls(directory, Manifest.from_json(json.load(f)))
+            return cls(directory, Manifest.from_json(json.load(f)), verify)
 
     @staticmethod
     def exists(directory: str) -> bool:
@@ -342,15 +444,49 @@ class TxStore:
 
     # -- block reads ----------------------------------------------------------
     def read_block(self, i: int) -> np.ndarray:
-        """One packed block ``uint32[T_i, IW]`` from disk."""
+        """One packed block ``uint32[T_i, IW]`` from disk, verified.
+
+        Raises :class:`MissingBlockError` / :class:`TruncatedBlockError` /
+        :class:`StaleManifestError` / :class:`ChecksumMismatchError` — each
+        damage class is distinct so callers (and the fsck CLI) can act on
+        it.  OS-level read failures propagate as ``OSError`` for the
+        reader's retry policy.
+        """
         meta = self.manifest.blocks[i]
-        arr = np.load(
-            os.path.join(self.directory, meta.file), allow_pickle=False
-        )
-        assert arr.shape == (meta.n_tx, self.n_words), (
-            f"block {i}: payload {arr.shape} != manifest "
-            f"{(meta.n_tx, self.n_words)}"
-        )
+        path = os.path.join(self.directory, meta.file)
+        if not os.path.exists(path):
+            raise MissingBlockError(
+                f"block {i}: {path} does not exist (manifest expects "
+                f"{meta.n_tx} rows) — restore the file or fsck --quarantine"
+            )
+        try:
+            arr = np.load(path, allow_pickle=False)
+        except (ValueError, EOFError) as e:
+            # np.save is not atomic: a crash mid-write leaves a payload
+            # shorter than its own header claims, which np.load rejects
+            raise TruncatedBlockError(
+                f"block {i}: {path} is truncated or torn "
+                f"(manifest expects {meta.n_tx}x{self.n_words} uint32): {e}"
+            ) from e
+        if arr.dtype != np.uint32 or arr.shape != (meta.n_tx, self.n_words):
+            raise StaleManifestError(
+                f"block {i}: payload {arr.dtype}{list(arr.shape)} != "
+                f"manifest uint32[{meta.n_tx}, {self.n_words}] at {path} — "
+                f"manifest is stale or hand-edited"
+            )
+        if meta.n_bytes is not None and int(arr.nbytes) != meta.n_bytes:
+            raise StaleManifestError(
+                f"block {i}: payload is {arr.nbytes}B but manifest records "
+                f"{meta.n_bytes}B at {path}"
+            )
+        if self.verify and meta.crc32c is not None:
+            got = crc32c(np.ascontiguousarray(arr))
+            if got != meta.crc32c:
+                raise ChecksumMismatchError(
+                    f"block {i}: CRC32C {got:#010x} != manifest "
+                    f"{meta.crc32c:#010x} at {path} — payload bits flipped "
+                    f"since the writer sealed it"
+                )
         return np.asarray(arr, np.uint32)
 
     def iter_blocks(self) -> Iterator[np.ndarray]:

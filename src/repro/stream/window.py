@@ -158,7 +158,10 @@ class WindowSpill:
     with the streamed support counters, at O(block) host cost at both ends.
     An existing store at ``directory`` is resumed (appended after its last
     block; geometry must match), never reset — a restarted stream extends
-    its history.
+    its history.  The resume path runs the writer's shallow fsck pass
+    first (``store/fsck.py``), which adopts any blocks a crashed stream
+    saved but never indexed and clears torn residue, so a kill mid-spill
+    never corrupts the history the restart appends to.
 
     The engine wires this up via ``StreamParams.spill_dir``; standalone use::
 

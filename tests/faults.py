@@ -1,0 +1,154 @@
+"""Fault-injection harness — the controlled ways a mining run can die.
+
+Every robustness claim in DESIGN.md's "Failure model" is exercised through
+these hooks rather than ad-hoc file poking, so the tests *are* the failure
+model: each damage class has exactly one injector, and each injector's name
+matches the fsck damage kind it should provoke.
+
+  :func:`corrupt_block`    damage one block payload on disk — ``bitflip``
+                           (CRC-detectable), ``truncate`` (torn write),
+                           ``delete`` (missing file), ``stale`` (valid npy,
+                           wrong geometry — a manifest/payload mismatch).
+  :func:`orphan_block`     plant a crashed writer's residue: a block file
+                           beyond the manifest, optionally torn.
+  :func:`fail_nth_read`    make the Nth store block read raise — transient
+                           (first ``fail_count`` calls) or persistent.
+  :func:`kill_after_round` an executor ``round_hook`` that raises
+                           :class:`SimulatedCrash` after round R, right
+                           after the round's checkpoint is saved.
+
+Used by ``tests/test_faults.py`` and wired into ``tools/check.sh --faults``.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Callable, Iterator, Optional, Type
+
+import numpy as np
+
+from repro.store.store import BLOCK_DIR, TxStore
+
+
+class SimulatedCrash(Exception):
+    """Raised by the kill hook: the process 'died' between rounds."""
+
+
+def _block_path(store_dir: str, block_index: int) -> str:
+    st = TxStore.open(store_dir, verify=False)
+    return os.path.join(store_dir, st.manifest.blocks[block_index].file)
+
+
+def corrupt_block(store_dir: str, block_index: int, mode: str) -> str:
+    """Damage one indexed block payload; returns the path touched.
+
+    ``bitflip``  flip a single bit in the middle of the payload (header
+                 left intact so the damage is only CRC-detectable);
+    ``truncate`` cut the file to half its length (torn ``np.save``);
+    ``delete``   remove the file entirely;
+    ``stale``    overwrite with a well-formed npy of the wrong row count
+                 (reads cleanly, disagrees with the manifest).
+    """
+    path = _block_path(store_dir, block_index)
+    if mode == "bitflip":
+        with open(path, "r+b") as f:
+            raw = bytearray(f.read())
+            # stay clear of the ~128B npy header: flip a payload bit
+            pos = len(raw) // 2 + 64
+            raw[pos] ^= 0x10
+            f.seek(0)
+            f.write(raw)
+    elif mode == "truncate":
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(size // 2)
+    elif mode == "delete":
+        os.remove(path)
+    elif mode == "stale":
+        st = TxStore.open(store_dir, verify=False)
+        meta = st.manifest.blocks[block_index]
+        wrong = np.zeros((meta.n_tx + 1, st.n_words), np.uint32)
+        np.save(path.removesuffix(".npy"), wrong)
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    return path
+
+
+def orphan_block(
+    store_dir: str, n_rows: int = 4, *, torn: bool = False,
+    index: Optional[int] = None,
+) -> str:
+    """Plant a post-manifest block file, as a crashed writer would leave it.
+
+    By default the orphan lands at the next contiguous index (adoptable);
+    pass ``index`` to plant a gap, or ``torn=True`` for a half-written
+    payload.  Returns the orphan's path.
+    """
+    from repro.store.store import block_file_index
+
+    st = TxStore.open(store_dir, verify=False)
+    if index is None:
+        # next contiguous name after everything on disk *and* in the
+        # manifest, so stacked orphans mimic a writer's sequential appends
+        on_disk = (
+            block_file_index(f)
+            for f in os.listdir(os.path.join(store_dir, BLOCK_DIR))
+        )
+        indexed = (block_file_index(b.file) for b in st.manifest.blocks)
+        index = 1 + max(
+            (i for i in (*on_disk, *indexed) if i is not None), default=-1
+        )
+    path = os.path.join(store_dir, BLOCK_DIR, f"block_{index:06d}.npy")
+    rows = np.zeros((n_rows, st.n_words), np.uint32)
+    rows[:, 0] = 1  # item 0 present, so adoption visibly changes counts
+    np.save(path.removesuffix(".npy"), rows)
+    if torn:
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+    return path
+
+
+@contextlib.contextmanager
+def fail_nth_read(
+    n: int,
+    exc: Type[BaseException] = OSError,
+    *,
+    fail_count: int = 10 ** 9,
+) -> Iterator[Callable[[], int]]:
+    """Patch ``TxStore.read_block`` so its Nth call (1-based) raises.
+
+    ``fail_count`` bounds how many consecutive calls fail from the Nth on:
+    the default is effectively persistent; ``fail_count=2`` models a
+    transient fault a 3-attempt retry policy survives.  Yields a zero-arg
+    callable returning how many reads were attempted so far.
+    """
+    calls = {"n": 0}
+    real = TxStore.read_block
+
+    def patched(self, i):
+        calls["n"] += 1
+        if n <= calls["n"] < n + fail_count:
+            raise exc(f"injected failure on read #{calls['n']} (block {i})")
+        return real(self, i)
+
+    TxStore.read_block = patched
+    try:
+        yield lambda: calls["n"]
+    finally:
+        TxStore.read_block = real
+
+
+def kill_after_round(r: int) -> Callable[[int], None]:
+    """Executor ``round_hook`` raising :class:`SimulatedCrash` after round r.
+
+    The executor calls the hook *after* the round's checkpoint is saved, so
+    the crash always leaves a resumable state — exactly the contract
+    ``--kill-after-round`` exercises end to end.
+    """
+
+    def hook(completed_round: int) -> None:
+        if completed_round >= r:
+            raise SimulatedCrash(f"simulated death after round {completed_round}")
+
+    return hook

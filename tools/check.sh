@@ -1,13 +1,14 @@
 #!/usr/bin/env bash
 # CI gate (also the local pre-push check): tier-1 tests + smoke benchmarks
 # + the 4-host-device distributed-mining parity gate + the out-of-core
-# store parity gate.
+# store parity gate + the fault-injection gate (kill-and-resume parity).
 #
 #   tools/check.sh            # everything
 #   tools/check.sh --tests    # tier-1 pytest only
 #   tools/check.sh --bench    # smoke benchmarks only
 #   tools/check.sh --cluster  # 4-device cluster parity only
 #   tools/check.sh --store    # out-of-core store parity only
+#   tools/check.sh --faults   # fault-injection suite + kill/resume parity
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -16,13 +17,15 @@ run_tests=1
 run_bench=1
 run_cluster=1
 run_store=1
+run_faults=1
 case "${1:-}" in
-  --tests) run_bench=0; run_cluster=0; run_store=0 ;;
-  --bench) run_tests=0; run_cluster=0; run_store=0 ;;
-  --cluster) run_tests=0; run_bench=0; run_store=0 ;;
-  --store) run_tests=0; run_bench=0; run_cluster=0 ;;
+  --tests) run_bench=0; run_cluster=0; run_store=0; run_faults=0 ;;
+  --bench) run_tests=0; run_cluster=0; run_store=0; run_faults=0 ;;
+  --cluster) run_tests=0; run_bench=0; run_store=0; run_faults=0 ;;
+  --store) run_tests=0; run_bench=0; run_cluster=0; run_faults=0 ;;
+  --faults) run_tests=0; run_bench=0; run_cluster=0; run_store=0 ;;
   "") ;;
-  *) echo "usage: tools/check.sh [--tests|--bench|--cluster|--store]" >&2; exit 2 ;;
+  *) echo "usage: tools/check.sh [--tests|--bench|--cluster|--store|--faults]" >&2; exit 2 ;;
 esac
 
 if [[ $run_tests -eq 1 ]]; then
@@ -50,6 +53,20 @@ if [[ $run_store -eq 1 ]]; then
   # a bit-exact FITable vs the dense path (exits non-zero on any mismatch)
   python -m repro.launch.mine --db T0.5I0.024P8PL5TL8 --support 0.08 \
     --store "$(mktemp -d)" --blocktx 64 --parity
+fi
+
+if [[ $run_faults -eq 1 ]]; then
+  echo "== fault injection: integrity / retry / fsck / checkpoint suite =="
+  python -m pytest -x -q tests/test_faults.py
+  echo "== fault injection: kill-after-round + resume, bit-exact parity =="
+  # a distributed mine is killed (exit 0) right after round 0's checkpoint,
+  # then resumed from disk; --parity requires the finished FITable to be
+  # bit-exact vs an uninterrupted single-device fimi.run
+  CKPT="$(mktemp -d)/ck"
+  python -m repro.launch.cluster_mine --db T0.5I0.024P8PL5TL8 \
+    --support 0.08 -P 4 --chunk 1 --checkpoint "$CKPT" --kill-after-round 0
+  python -m repro.launch.cluster_mine --db T0.5I0.024P8PL5TL8 \
+    --support 0.08 -P 4 --chunk 1 --checkpoint "$CKPT" --resume --parity
 fi
 
 echo "check.sh: OK"
