@@ -1,4 +1,7 @@
-"""Generate EXPERIMENTS.md §Dry-run + §Roofline tables from results/."""
+"""Generate EXPERIMENTS.md §Dry-run + §Roofline tables from results/, plus
+the cross-suite ``BENCH_*.json`` summary table (one row per benchmark file:
+its headline scalars, with the regression-gated overhead/slowdown ratios
+flagged — the same keys ``obs_report baseline`` exits non-zero on)."""
 from __future__ import annotations
 
 import json
@@ -8,7 +11,65 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+REPO = Path(__file__).resolve().parents[1]
+RESULTS = REPO / "results" / "dryrun"
+
+#: top-level BENCH keys that are configuration, not results
+_CONFIG_KEYS = {"bench", "backend", "db", "fast", "reps", "block_tx",
+                "n_blocks", "P", "window_blocks", "support"}
+
+
+def _is_ratio(key: str) -> bool:
+    """Measured-vs-baseline ratio keys (printed with an 'x' suffix)."""
+    return "overhead" in key or "slowdown" in key
+
+
+def _is_gate(key: str) -> bool:
+    """Parity-type ratios (expected ≈1.0) flagged against the threshold —
+    what CI gates via ``obs_report baseline --match overhead``; slowdown
+    factors are bounded-by-design and only displayed."""
+    return "overhead" in key
+
+
+def bench_summary(root: Path = REPO, threshold: float = 0.05) -> str:
+    """One markdown table over every ``BENCH_*.json`` under ``root``."""
+    files = sorted(root.glob("BENCH_*.json"))
+    if not files:
+        return "(no BENCH_*.json files found)"
+    out = ["| file | backend | entries | headline results |",
+           "|---|---|---|---|"]
+    n_gates = n_bad = 0
+    for f in files:
+        try:
+            d = json.loads(f.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            out.append(f"| {f.name} | | | UNREADABLE: {e} |")
+            continue
+        cells = []
+        for k, v in d.items():
+            if k in _CONFIG_KEYS or isinstance(v, (bool, str, list, dict)):
+                continue
+            if isinstance(v, (int, float)):
+                if _is_gate(k):
+                    n_gates += 1
+                    bad = v > 1.0 + threshold
+                    n_bad += bad
+                    cells.append(f"{k}={v:.3f}x"
+                                 + (" ⚠" if bad else " ✓"))
+                elif _is_ratio(k):
+                    cells.append(f"{k}={v:.3f}x")
+                else:
+                    cells.append(f"{k}={v:.4g}")
+        n_entries = len(d.get("entries") or [])
+        out.append(f"| {f.name} | {d.get('backend', '?')} | {n_entries} | "
+                   f"{'  '.join(cells) or '—'} |")
+    out.append(
+        f"\n**{len(files)} benchmark files; {n_gates - n_bad}/{n_gates} "
+        f"overhead gates within {1 + threshold:.2f}x** "
+        f"(gate mechanically: `python -m repro.launch.obs_report baseline "
+        f"--match overhead --bench BENCH_*.json`)."
+    )
+    return "\n".join(out)
 
 
 def dryrun_table(mesh: str) -> str:
@@ -60,6 +121,8 @@ def main():
     print("\n## §Roofline — single pod\n")
     rows = roofline.full_table("single")
     print(roofline.render_markdown(rows))
+    print("\n## Benchmark suite summary (BENCH_*.json)\n")
+    print(bench_summary())
 
 
 if __name__ == "__main__":

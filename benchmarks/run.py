@@ -90,6 +90,12 @@ def main() -> None:
             print(roofline.render_markdown(rows))
         print(f"[{name}: {time.perf_counter()-t0:.1f}s]", flush=True)
 
+    # one cross-suite digest over everything the sections just wrote
+    from benchmarks.report import bench_summary
+
+    print("\n===== summary (BENCH_*.json) =====", flush=True)
+    print(bench_summary())
+
 
 if __name__ == "__main__":
     main()

@@ -42,6 +42,8 @@ from repro.core import eclat, fimi, phases
 from repro.cluster import checkpoint as checkpoint_mod
 from repro.cluster import planner as planner_mod
 from repro.cluster import rebalance as rebalance_mod
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 AXIS = fimi.AXIS  # the miner mesh axis name ("miners")
 
@@ -153,6 +155,51 @@ class ClusterReport:
             return 0.0
         return float(np.abs(est / est.sum() - obs / obs.sum()).max())
 
+    def snapshot(self) -> Dict[str, dict]:
+        """This report in the canonical metrics-snapshot shape.
+
+        The properties above (``imbalance``, ``makespan_trips``, …) stay the
+        ergonomic views; this is the machine-readable form every subsystem
+        shares (``repro.obs.metrics.snapshot()``), so run records and
+        ``obs_report`` diff cluster telemetry like any other metric.
+        """
+        counters = {
+            "cluster/donations": len(self.donations),
+            "cluster/exchange_overflow": int(self.exchange_overflow),
+            "cluster/mine_overflow": int(self.mine_overflow),
+            "cluster/rounds": self.n_rounds,
+        }
+        gauges = {
+            "cluster/imbalance": self.imbalance,
+            "cluster/makespan_trips": self.makespan_trips,
+            "cluster/load/estimation_error": self.estimation_error(),
+        }
+        for phase, ms in self.phase_ms.items():
+            gauges[f"cluster/phase_ms/{phase}"] = float(ms)
+        for p in range(self.P):
+            gauges[f"cluster/shard{p}/est_load"] = float(self.est_loads[p])
+            gauges[f"cluster/shard{p}/obs_load"] = float(self.observed_loads[p])
+        hist = obs_metrics.Histogram("cluster/round_makespan_trips")
+        for r in self.rounds:
+            hist.record(float(np.max(r.work_iters)) if len(r.work_iters) else 0.0)
+        return {
+            "counters": counters,
+            "gauges": gauges,
+            "histograms": {hist.name: hist.summary()},
+        }
+
+    def emit(self, reg: Optional[obs_metrics.MetricsRegistry] = None) -> None:
+        """Publish this report into the (default: global) metrics registry."""
+        reg = reg if reg is not None else obs_metrics.registry()
+        snap = self.snapshot()
+        for name, v in snap["counters"].items():
+            reg.counter(name).inc(int(v))
+        for name, v in snap["gauges"].items():
+            reg.gauge(name).set(float(v))
+        h = reg.histogram("cluster/round_makespan_trips")
+        for r in self.rounds:
+            h.record(float(np.max(r.work_iters)) if len(r.work_iters) else 0.0)
+
 
 @dataclasses.dataclass
 class ClusterResult:
@@ -200,14 +247,16 @@ def execute(
     spmd, mesh, backend = _auto_spmd(P, spmd, mesh)
     phase_ms = {"plan": 0.0, "exchange": 0.0, "mine": 0.0, "merge": 0.0}
 
+    tr = obs_trace.TRACER
     t0 = time.perf_counter()
-    if plan is None:
-        plan = planner_mod.plan(
-            tx_shards,
-            n_items,
-            dataclasses.replace(params.planner),
-            key,
-        )
+    with tr.span("cluster/plan", P=P, backend=backend):
+        if plan is None:
+            plan = planner_mod.plan(
+                tx_shards,
+                n_items,
+                dataclasses.replace(params.planner),
+                key,
+            )
     phase_ms["plan"] = (time.perf_counter() - t0) * 1e3
     classes = plan.classes
     est_sizes = plan.est_sizes
@@ -305,16 +354,18 @@ def execute(
         prefix_packed = np.asarray(bm.pack_bool(jnp.asarray(prefix_rows)))
 
         t0 = time.perf_counter()
-        out3 = p3(
-            tx_shards,
-            local_valid,
-            jnp.broadcast_to(
-                jnp.asarray(prefix_packed), (P, C_round, prefix_packed.shape[-1])
-            ),
-            jnp.broadcast_to(jnp.asarray(class_valid), (P, C_round)),
-            jnp.broadcast_to(jnp.asarray(class_assign), (P, C_round)),
-        )
-        out3 = jax.block_until_ready(out3)
+        with tr.span("cluster/exchange", round=r, classes=len(round_ids)):
+            out3 = p3(
+                tx_shards,
+                local_valid,
+                jnp.broadcast_to(
+                    jnp.asarray(prefix_packed),
+                    (P, C_round, prefix_packed.shape[-1]),
+                ),
+                jnp.broadcast_to(jnp.asarray(class_valid), (P, C_round)),
+                jnp.broadcast_to(jnp.asarray(class_assign), (P, C_round)),
+            )
+            out3 = jax.block_until_ready(out3)
         phase_ms["exchange"] += (time.perf_counter() - t0) * 1e3
 
         # ---- Phase 4: mine this round's classes on the received slabs -----
@@ -324,21 +375,23 @@ def execute(
         keys4 = jax.vmap(lambda i: jax.random.fold_in(key, i))(
             r * P + jnp.arange(P)
         )
-        t0 = time.perf_counter()
-        out4 = p4(
-            out3.slab.reshape(P, -1, IW),
-            out3.slab_valid.reshape(P, -1),
-            tx_shards,
-            local_valid,
-            jnp.asarray(seed_prefix),
-            jnp.asarray(seed_ext),
-            jnp.asarray(seed_valid),
-            anc_b,
-            minsup_b,
-            keys4,
-        )
-        out4 = jax.device_get(out4)
-        phase_ms["mine"] += (time.perf_counter() - t0) * 1e3
+        mine_t0 = time.perf_counter()
+        with tr.span("cluster/mine", round=r, chunk=chunk):
+            out4 = p4(
+                out3.slab.reshape(P, -1, IW),
+                out3.slab_valid.reshape(P, -1),
+                tx_shards,
+                local_valid,
+                jnp.asarray(seed_prefix),
+                jnp.asarray(seed_ext),
+                jnp.asarray(seed_valid),
+                anc_b,
+                minsup_b,
+                keys4,
+            )
+            out4 = jax.device_get(out4)
+        mine_s = time.perf_counter() - mine_t0
+        phase_ms["mine"] += mine_s * 1e3
 
         exchange_overflow += int(np.asarray(out3.overflow).reshape(-1)[0])
         counts = np.asarray(out4.fi_count).reshape(P)
@@ -361,6 +414,25 @@ def execute(
         )
         ledger.record_round(trips, est_mined)
 
+        if tr.enabled:
+            # Modeled per-shard lanes: shards run the round in lockstep, so
+            # shard p's busy fraction is its DFS-trip share of the slowest
+            # shard — the rendered lane gaps ARE the round's imbalance.
+            t_max = max(float(trips.max()), 1.0)
+            for p in range(P):
+                tr.add_span(
+                    "cluster/mine",
+                    mine_t0,
+                    mine_s * float(trips[p]) / t_max,
+                    track=f"shard{p}",
+                    args={
+                        "round": r,
+                        "trips": int(trips[p]),
+                        "classes": len(take[p]),
+                        "est_mined": float(est_mined[p]),
+                    },
+                )
+
         moved: List[rebalance_mod.Donation] = []
         if params.rebalance and any(queues):
             moved = rebalance_mod.rebalance(
@@ -372,6 +444,12 @@ def execute(
                 max_donations=params.max_donations,
             )
             donations.extend(moved)
+            for d in moved:
+                tr.instant(
+                    "cluster/donate",
+                    round=d.round_index, class_id=d.class_id,
+                    src=d.src, dst=d.dst,
+                )
         rounds.append(
             RoundStats(
                 round_index=r,
@@ -452,6 +530,7 @@ def execute(
         exchange_overflow=exchange_overflow,
         mine_overflow=mine_overflow,
     )
+    report.emit()
     return ClusterResult(table=table, plan=plan, report=report)
 
 

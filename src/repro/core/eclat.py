@@ -59,6 +59,8 @@ class EclatResult(NamedTuple):
     reservoir_items: jnp.ndarray     # uint32[R, IW]
     reservoir_supports: jnp.ndarray  # int32[R]
     n_iters: jnp.ndarray     # int32 — loop trips executed
+    n_popped: jnp.ndarray    # int32 — DFS nodes mined; /(n_iters·K) =
+    #                          frontier occupancy (the batching efficiency)
 
 
 class _State(NamedTuple):
@@ -76,6 +78,7 @@ class _State(NamedTuple):
     res_seen: jnp.ndarray    # t in Algorithm R
     key: jax.Array
     it: jnp.ndarray
+    popped: jnp.ndarray      # DFS nodes popped over all trips
 
 
 #: single-prefix support plug-in: (item_bits[I, W], tid[W]) -> int32[I]
@@ -186,6 +189,7 @@ def mine_seeded(
         res_seen=jnp.asarray(0, jnp.int32),
         key=key,
         it=jnp.asarray(0, jnp.int32),
+        popped=jnp.asarray(0, jnp.int32),
     )
 
     # Constant across iterations: packed one-hot masks of every item
@@ -291,6 +295,7 @@ def mine_seeded(
             res_seen=res_seen,
             key=key,
             it=s.it + 1,
+            popped=s.popped + active.sum().astype(jnp.int32),
         )
 
     final = jax.lax.while_loop(cond, body, init)
@@ -303,6 +308,7 @@ def mine_seeded(
         reservoir_items=final.res_items,
         reservoir_supports=final.res_supp,
         n_iters=final.it,
+        n_popped=final.popped,
     )
 
 

@@ -337,6 +337,8 @@ class Phase4Out(NamedTuple):
     prefix_supports: jnp.ndarray  # int32[A] — global Supp(W) for ancestor set
     overflow: jnp.ndarray
     work_iters: jnp.ndarray    # int32 — DFS trips (the load-balance metric)
+    nodes_popped: jnp.ndarray  # int32 — DFS nodes mined; /(trips·K) is the
+    #                            frontier occupancy (obs histogram)
 
 
 def phase4_mine(
@@ -396,4 +398,5 @@ def phase4_mine(
         prefix_supports=prefix_supports,
         overflow=res.stack_overflow,
         work_iters=res.n_iters,
+        nodes_popped=res.n_popped,
     )

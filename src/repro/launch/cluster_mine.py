@@ -108,6 +108,7 @@ def main():
     from repro import cluster
     from repro.core import eclat, fimi
     from repro.launch.data_source import resolve_source
+    from repro.obs.session import add_obs_flags, start_session
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--db", default="T2I0.048P50PL10TL16")
@@ -146,7 +147,9 @@ def main():
                     help="simulate a crash: exit 0 right after round R's "
                          "checkpoint is saved (fault-injection gate)")
     ap.add_argument("--seed", type=int, default=0)
+    add_obs_flags(ap)
     args = ap.parse_args()
+    obs = start_session(args, "cluster_mine")
 
     store, dense, src = resolve_source(
         args.dataset, args.store, args.db,
@@ -178,6 +181,21 @@ def main():
           f"imbalance={rep.imbalance:.2f}  "
           f"estimation_error={rep.estimation_error():.3f}  "
           f"donations={len(rep.donations)}")
+    if obs:
+        for r in rep.rounds:
+            obs.event(
+                "round", index=r.round_index,
+                classes_mined=r.classes_mined,
+                work_iters=r.work_iters.tolist(),
+                replication=r.replication,
+                donations=len(r.donations),
+            )
+        obs.finish(
+            n_fis=res.table.n_fis, mine_wall_s=wall, rounds=rep.n_rounds,
+            backend=rep.backend, imbalance=rep.imbalance,
+            makespan_trips=rep.makespan_trips,
+            estimation_error=rep.estimation_error(),
+        )
 
     if args.curve:
         counts = [int(c) for c in args.curve.split(",") if c]

@@ -44,6 +44,7 @@ def main():
     from repro.core import eclat, fimi
     from repro.launch.data_source import resolve_source
     from repro.launch.mesh import make_miner_mesh
+    from repro.obs.session import add_obs_flags, start_session
     from repro.store.reader import BlockReader
 
     ap = argparse.ArgumentParser()
@@ -69,7 +70,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--frontier", type=int, default=16,
                     help="DFS nodes mined per while_loop trip (K)")
+    add_obs_flags(ap)
     args = ap.parse_args()
+    obs = start_session(args, "mine")
 
     # ---- resolve the data source -------------------------------------------
     store, dense, src = resolve_source(
@@ -130,6 +133,11 @@ def main():
     if store is not None:
         print(f"streamed host high-water: {reader.peak_host_bytes} bytes "
               f"(budget {reader.budget_bytes})")
+    if obs:
+        obs.event("mined", n_fis=res.n_fis, wall_s=dt,
+                  work_iters=res.work_iters.tolist())
+        obs.finish(n_fis=res.n_fis, n_tx=n_tx, n_items=n_items,
+                   mine_wall_s=dt, replication=res.replication)
 
     # ---- parity gate: out-of-core result == dense in-RAM result ------------
     if args.parity:

@@ -1,0 +1,409 @@
+"""Run-record report CLI: summarize, diff, and gate on observability output.
+
+Reads the run records :mod:`repro.obs.runlog` writes (``--trace`` /
+``--metrics`` on any launcher) and the ``BENCH_*.json`` files the benchmark
+suite writes.  **jax-free by construction** (the fsck layering rule): this
+tool must load anywhere the JSON does — CI report steps, a laptop without
+the accelerator stack, a post-mortem container.
+
+Subcommands::
+
+  summary RUN_DIR
+      Human-readable digest: manifest identity, driver event timeline,
+      the metric families, span time by name.
+
+  diff OLD_RUN NEW_RUN [--threshold 0.2]
+      Compare two runs' time-like metrics (wall_s, */phase_ms/*, *_ms/*_s
+      gauges, latency-histogram p95s).  Prints old → new with the ratio and
+      **exits 1** when any time-like metric regressed by more than the
+      threshold (0.2 = +20%).  Counters/gauges that are not time-like are
+      shown for context but never gate.
+
+  baseline --bench BENCH.json [...] [--threshold 0.05] [RUN_DIR]
+      Gate on benchmark baselines: every ratio-type key in each BENCH file
+      (``*_overhead*``, ``*_slowdown*`` — measured-vs-baseline ratios where
+      1.0 = parity) must stay <= 1 + threshold; ``--match SUBSTR`` narrows
+      the gated keys (e.g. ``--match overhead`` for the parity-type gates
+      only).  With a RUN_DIR, metrics sharing a flattened name with a bench
+      key are also compared under the same threshold.  Exits 1 on any
+      regression.
+
+  inject-slowdown SRC_RUN DST_RUN --factor 1.3
+      Copy a run record with every time-like quantity scaled by ``factor``
+      (wall_s, *_ms/*_s gauges and histograms, trace durations).  The
+      deterministic partner for testing the diff gate: ``diff SRC DST``
+      must fail and ``diff SRC SRC`` must pass, with no timing flakiness.
+
+Exit codes: 0 ok, 1 regression detected, 2 usage / unreadable record.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+import sys
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.obs import runlog
+
+#: gauge/summary names treated as durations (the regression-gated set)
+_TIME_SUFFIXES = ("_ms", "_s", "wall_s")
+
+
+def _is_time_like(name: str) -> bool:
+    short = name.rsplit("/", 1)[-1]
+    return (
+        short.endswith(_TIME_SUFFIXES)
+        or "/phase_ms/" in name
+        or "stall" in short
+        or "latency" in short
+    )
+
+
+def _time_metrics(run: dict) -> Dict[str, float]:
+    """Flatten one run's time-like scalars: summary + gauges + hist p95s."""
+    out: Dict[str, float] = {}
+    man = run.get("manifest") or {}
+    for k, v in man.items():
+        if isinstance(v, (int, float)) and _is_time_like(str(k)):
+            out[str(k)] = float(v)
+    m = run.get("metrics") or {}
+    for name, v in (m.get("gauges") or {}).items():
+        if isinstance(v, (int, float)) and _is_time_like(name):
+            out[name] = float(v)
+    for name, summ in (m.get("histograms") or {}).items():
+        if _is_time_like(name) and isinstance(summ, dict):
+            p95 = summ.get("p95")
+            if isinstance(p95, (int, float)):
+                out[f"{name}:p95"] = float(p95)
+    return out
+
+
+def _load(run_dir: str) -> dict:
+    try:
+        return runlog.load_run(run_dir)
+    except (FileNotFoundError, json.JSONDecodeError) as e:
+        print(f"obs_report: cannot read run record at {run_dir}: {e}",
+              file=sys.stderr)
+        sys.exit(2)
+
+
+# ---------------------------------------------------------------------------
+# summary
+# ---------------------------------------------------------------------------
+
+
+def _span_totals(trace: Optional[dict]) -> List[Tuple[str, float, int]]:
+    """(name, total_ms, count) per complete-event span, longest first."""
+    if not trace:
+        return []
+    acc: Dict[str, List[float]] = {}
+    for ev in trace.get("traceEvents", []):
+        if ev.get("ph") == "X":
+            acc.setdefault(ev["name"], []).append(ev.get("dur", 0) / 1e3)
+    return sorted(
+        ((n, sum(d), len(d)) for n, d in acc.items()),
+        key=lambda t: -t[1],
+    )
+
+
+def cmd_summary(args) -> int:
+    run = _load(args.run)
+    man = run["manifest"]
+    print(f"run: {man.get('name')}  dir={run['run_dir']}")
+    print(f"  git={str(man.get('git_sha'))[:12]}  "
+          f"backend={man.get('backend')} x{man.get('n_devices')} "
+          f"({man.get('device_kind')})")
+    wall = man.get("wall_s")
+    print(f"  wall_s={wall:.3f}" if isinstance(wall, (int, float))
+          else "  wall_s=<unfinished>")
+    extras = {
+        k: v for k, v in man.items()
+        if k not in ("name", "config", "argv", "git_sha", "started_unix",
+                     "backend", "device_kind", "n_devices", "wall_s")
+    }
+    if extras:
+        print("  summary: " + "  ".join(f"{k}={v}" for k, v in extras.items()))
+    if run["events"]:
+        print(f"events ({len(run['events'])}):")
+        for ev in run["events"][: args.events]:
+            rest = {k: v for k, v in ev.items() if k not in ("t", "kind")}
+            print(f"  t={ev['t']:>8.3f}s  {ev['kind']:<12} "
+                  + " ".join(f"{k}={v}" for k, v in rest.items()))
+        if len(run["events"]) > args.events:
+            print(f"  ... {len(run['events']) - args.events} more")
+    m = run["metrics"] or {}
+    if m.get("counters"):
+        print("counters:")
+        for k, v in sorted(m["counters"].items()):
+            print(f"  {k} = {v}")
+    if m.get("gauges"):
+        print(f"gauges: {len(m['gauges'])} "
+              f"(use diff/baseline for comparisons)")
+        for k, v in sorted(m["gauges"].items())[: args.gauges]:
+            print(f"  {k} = {v:.6g}")
+        if len(m["gauges"]) > args.gauges:
+            print(f"  ... {len(m['gauges']) - args.gauges} more")
+    if m.get("histograms"):
+        print("histograms:")
+        for k, s in sorted(m["histograms"].items()):
+            print(f"  {k}: n={s['count']} mean={s['mean']:.4g} "
+                  f"p50={s['p50']:.4g} p95={s['p95']:.4g} max={s['max']:.4g}")
+    spans = _span_totals(run["trace"])
+    if spans:
+        print("trace spans (total ms):")
+        for name, tot, cnt in spans[:12]:
+            print(f"  {name:<28} {tot:>10.2f}ms  x{cnt}")
+        print(f"  -> load {run['run_dir']}/trace.json in "
+              f"https://ui.perfetto.dev or chrome://tracing")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# diff
+# ---------------------------------------------------------------------------
+
+
+def cmd_diff(args) -> int:
+    old, new = _load(args.old), _load(args.new)
+    t_old, t_new = _time_metrics(old), _time_metrics(new)
+    shared = sorted(set(t_old) & set(t_new))
+    if not shared:
+        print("obs_report diff: no shared time-like metrics "
+              "(were both runs recorded with --metrics or --trace?)",
+              file=sys.stderr)
+        return 2
+    regressions: List[str] = []
+    print(f"diff {args.old} -> {args.new}  (threshold +{args.threshold:.0%})")
+    for name in shared:
+        a, b = t_old[name], t_new[name]
+        if a <= args.min_seconds_ignore and b <= args.min_seconds_ignore:
+            continue  # sub-noise-floor timings cannot gate
+        ratio = b / a if a > 0 else float("inf")
+        worse = b > a * (1.0 + args.threshold)
+        flag = "  << REGRESSION" if worse else ""
+        print(f"  {name:<36} {a:>12.4f} -> {b:>12.4f}  "
+              f"x{ratio:.2f}{flag}")
+        if worse:
+            regressions.append(name)
+    # non-time context: counter deltas worth a glance (never gate)
+    c_old = (old.get("metrics") or {}).get("counters") or {}
+    c_new = (new.get("metrics") or {}).get("counters") or {}
+    changed = {
+        k: (c_old[k], c_new[k])
+        for k in set(c_old) & set(c_new) if c_old[k] != c_new[k]
+    }
+    if changed:
+        print("counter deltas (context only):")
+        for k, (a, b) in sorted(changed.items()):
+            print(f"  {k:<36} {a} -> {b}")
+    if regressions:
+        print(f"REGRESSION: {len(regressions)} time-like metric(s) slowed "
+              f"beyond +{args.threshold:.0%}: {', '.join(regressions)}")
+        return 1
+    print("ok: no time-like metric regressed beyond the threshold")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+
+def _flatten(obj, prefix: str = "") -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(_flatten(v, f"{prefix}{k}."))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            name = v.get("name") if isinstance(v, dict) else None
+            out.update(_flatten(v, f"{prefix}{name or i}."))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix[:-1]] = float(obj)
+    return out
+
+
+def _ratio_gates(flat: Dict[str, float],
+                 match: Optional[List[str]] = None) -> Dict[str, float]:
+    """Keys whose value is a measured/baseline ratio (1.0 = parity).
+
+    ``match`` narrows the gated set to keys containing any substring — e.g.
+    ``--match overhead`` gates the parity-type overheads at a tight
+    threshold without dragging in looser-by-design slowdown factors.
+    """
+    gates = {
+        k: v for k, v in flat.items()
+        if "overhead" in k.rsplit(".", 1)[-1]
+        or "slowdown" in k.rsplit(".", 1)[-1]
+    }
+    if match:
+        gates = {k: v for k, v in gates.items()
+                 if any(m in k for m in match)}
+    return gates
+
+
+def cmd_baseline(args) -> int:
+    if not args.bench:
+        print("obs_report baseline: need at least one --bench BENCH.json",
+              file=sys.stderr)
+        return 2
+    failures: List[str] = []
+    run_flat: Dict[str, float] = {}
+    if args.run:
+        run = _load(args.run)
+        run_flat = _flatten(
+            {"gauges": (run["metrics"] or {}).get("gauges") or {}}
+        )
+        run_flat = {k.split("gauges.", 1)[-1]: v for k, v in run_flat.items()}
+    for path in args.bench:
+        try:
+            with open(path) as f:
+                bench = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"obs_report baseline: cannot read {path}: {e}",
+                  file=sys.stderr)
+            return 2
+        flat = _flatten(bench)
+        gates = _ratio_gates(flat, args.match or None)
+        label = os.path.basename(path)
+        print(f"{label}: {len(gates)} ratio gate(s), "
+              f"threshold <= {1 + args.threshold:.2f}x")
+        for k, v in sorted(gates.items()):
+            bad = v > 1.0 + args.threshold
+            print(f"  {k:<44} {v:.4f}x"
+                  + ("  << REGRESSION" if bad else ""))
+            if bad:
+                failures.append(f"{label}:{k}")
+        # run metrics that share a flattened name with a bench scalar
+        for k in sorted(set(flat) & set(run_flat)):
+            a, b = flat[k], run_flat[k]
+            if a <= 0:
+                continue
+            bad = b > a * (1.0 + args.threshold)
+            print(f"  {k:<44} bench={a:.4g} run={b:.4g}"
+                  + ("  << REGRESSION" if bad else ""))
+            if bad:
+                failures.append(f"{label}:{k}(run)")
+    if failures:
+        print(f"REGRESSION vs baseline: {', '.join(failures)}")
+        return 1
+    print("ok: all baseline gates hold")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# inject-slowdown (deterministic diff-gate test partner)
+# ---------------------------------------------------------------------------
+
+
+def _scale_time(obj, factor: float, name: str = ""):
+    if isinstance(obj, dict):
+        return {
+            k: _scale_time(v, factor, f"{name}/{k}" if name else str(k))
+            for k, v in obj.items()
+        }
+    if isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        return obj * factor if _is_time_like(name) else obj
+    return obj
+
+
+def cmd_inject(args) -> int:
+    src = _load(args.src)
+    os.makedirs(args.dst, exist_ok=True)
+    man = _scale_time(copy.deepcopy(src["manifest"]), args.factor)
+    with open(os.path.join(args.dst, runlog.MANIFEST), "w") as f:
+        json.dump(man, f, indent=2)
+    if src["metrics"] is not None:
+        m = copy.deepcopy(src["metrics"])
+        m["gauges"] = {
+            k: (v * args.factor if _is_time_like(k) else v)
+            for k, v in (m.get("gauges") or {}).items()
+        }
+        m["histograms"] = {
+            k: (
+                {
+                    f: (v * args.factor
+                        if _is_time_like(k) and f != "count" else v)
+                    for f, v in summ.items()
+                }
+                if isinstance(summ, dict) else summ
+            )
+            for k, summ in (m.get("histograms") or {}).items()
+        }
+        with open(os.path.join(args.dst, runlog.METRICS), "w") as f:
+            json.dump(m, f, indent=2)
+    if src["trace"] is not None:
+        tr = copy.deepcopy(src["trace"])
+        for ev in tr.get("traceEvents", []):
+            if "dur" in ev:
+                ev["dur"] = ev["dur"] * args.factor
+        with open(os.path.join(args.dst, runlog.TRACE), "w") as f:
+            json.dump(tr, f)
+    epath = os.path.join(args.src, runlog.EVENTS)
+    if os.path.exists(epath):
+        with open(epath) as fin, \
+                open(os.path.join(args.dst, runlog.EVENTS), "w") as fout:
+            fout.write(fin.read())
+    print(f"wrote {args.dst}: {args.src} with time-like metrics "
+          f"scaled x{args.factor}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+
+
+def main(argv: Optional[Iterable[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="obs_report", description=__doc__.split("\n\n")[0]
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    s = sub.add_parser("summary", help="digest one run record")
+    s.add_argument("run")
+    s.add_argument("--events", type=int, default=20,
+                   help="max driver events to print")
+    s.add_argument("--gauges", type=int, default=24,
+                   help="max gauges to print")
+    s.set_defaults(fn=cmd_summary)
+
+    d = sub.add_parser("diff", help="compare two runs; exit 1 on regression")
+    d.add_argument("old")
+    d.add_argument("new")
+    d.add_argument("--threshold", type=float, default=0.2,
+                   help="allowed slowdown fraction (0.2 = +20%%)")
+    d.add_argument("--min-seconds-ignore", type=float, default=0.0,
+                   dest="min_seconds_ignore",
+                   help="ignore time metrics where both sides are <= this "
+                        "(noise floor)")
+    d.set_defaults(fn=cmd_diff)
+
+    b = sub.add_parser("baseline",
+                       help="gate BENCH_*.json ratio keys; exit 1 on "
+                            "regression")
+    b.add_argument("run", nargs="?", default="",
+                   help="optional run record to compare by shared key names")
+    b.add_argument("--bench", action="append", default=[],
+                   help="BENCH_*.json baseline file (repeatable)")
+    b.add_argument("--threshold", type=float, default=0.05,
+                   help="allowed overhead/slowdown above 1.0 (0.05 = 5%%)")
+    b.add_argument("--match", action="append", default=[],
+                   help="only gate ratio keys containing this substring "
+                        "(repeatable; default: every overhead/slowdown key)")
+    b.set_defaults(fn=cmd_baseline)
+
+    i = sub.add_parser("inject-slowdown",
+                       help="copy a run record with time metrics scaled "
+                            "(deterministic diff-gate test input)")
+    i.add_argument("src")
+    i.add_argument("dst")
+    i.add_argument("--factor", type=float, default=1.3)
+    i.set_defaults(fn=cmd_inject)
+
+    args = ap.parse_args(list(argv) if argv is not None else None)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -122,6 +122,7 @@ def main():
     from repro.core import eclat, fimi
     from repro.data.ibm_gen import generate_dense, params_from_name
     from repro.launch.mesh import make_miner_mesh
+    from repro.obs.session import add_obs_flags, start_session
     from repro.serve import QueryCache, QueryEngine
     from repro.serve.index import build_indexes
 
@@ -144,7 +145,9 @@ def main():
     ap.add_argument("--pool", type=int, default=64,
                     help="distinct queries per kind in the workload")
     ap.add_argument("--seed", type=int, default=0)
+    add_obs_flags(ap)
     args = ap.parse_args()
+    obs = start_session(args, "serve_mine")
 
     # ---- mine ---------------------------------------------------------------
     dense = generate_dense(params_from_name(args.db, seed=args.seed))
@@ -210,6 +213,17 @@ def main():
     es = engine.stats()
     print(f"engine: generation={es['generation']} (index hot-swaps; see "
           f"repro.launch.stream_mine) F={es['n_fis']} R={es['n_rules']}")
+    if obs:
+        obs.event("served", queries=len(stream), dispatched=n_dispatched,
+                  qps=qps)
+        obs.finish(
+            n_fis=fi_index.n_fis, n_rules=rule_index.n_rules, qps=qps,
+            serve_wall_s=wall,
+            batch_p50_ms=float(np.percentile(lat, 50)),
+            batch_p95_ms=float(np.percentile(lat, 95)),
+            batch_p99_ms=float(np.percentile(lat, 99)),
+            cache_hit_rate=s.hit_rate,
+        )
 
     # a taste of the product: the most confident rules overall
     print(f"top-{min(5, rule_index.n_rules)} rules by confidence:")

@@ -78,6 +78,7 @@ def serve_block(sm, rng, n_queries, zipf_a=1.3):
 def main():
     from repro.core import eclat, fimi
     from repro.data.ibm_gen import drifting_stream, params_from_name
+    from repro.obs.session import add_obs_flags, start_session
     from repro.stream import StreamingMiner, StreamParams, fimi_mine_fn
 
     ap = argparse.ArgumentParser()
@@ -120,7 +121,9 @@ def main():
     ap.add_argument("--force", default=None,
                     choices=[None, "pallas", "ref", "interpret"])
     ap.add_argument("--seed", type=int, default=0)
+    add_obs_flags(ap)
     args = ap.parse_args()
+    obs = start_session(args, "stream_mine")
 
     gen_params = params_from_name(args.db, seed=args.seed)
     breaks = tuple(int(b) for b in args.breaks.split(",") if b != "")
@@ -208,6 +211,13 @@ def main():
                 (ev.block_index, segment, ev.remine_reason, ev.mine_ms,
                  ev.swap_ms, sm.engine.index.n_fis)
             )
+            if obs:
+                obs.event(
+                    "remine", block=ev.block_index, segment=segment,
+                    reason=ev.remine_reason, mine_ms=ev.mine_ms,
+                    swap_ms=ev.swap_ms, generation=ev.generation,
+                    n_fis=sm.engine.index.n_fis,
+                )
             print(f"  block {ev.block_index:>3} (segment {segment}): "
                   f"re-mine [{ev.remine_reason}] -> F={sm.engine.index.n_fis} "
                   f"R={sm.engine.rules.n_rules} gen={ev.generation} "
@@ -227,6 +237,8 @@ def main():
     if sm.engine is None:
         print(f"no mine: stream ended after {s.blocks_in} blocks, window "
               f"needs {args.blocks} to fill (raise --stream)")
+        if obs:
+            obs.finish(**s.as_dict())
         return
     reasons = {
         "initial": s.remines - s.fired_error - s.fired_border
@@ -249,6 +261,12 @@ def main():
           f"invalidations={es['invalidations']}")
     print(f"torn-index parity failures: {torn}"
           + ("  <-- BUG" if torn else "  (zero = atomic swaps)"))
+    if obs:
+        obs.finish(
+            **s.as_dict(), max_staleness=max_stale, torn=torn,
+            ingest_wall_s=ingest_s, serve_wall_s=serve_s,
+            n_served=n_served, generation=sm.engine.generation,
+        )
     if sm.spill is not None:
         hist = sm.spill.store()
         print(f"spill: {hist.n_blocks} expired blocks persisted to "

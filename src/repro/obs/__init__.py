@@ -1,0 +1,25 @@
+"""Unified observability layer: metrics registry, span tracing, run records.
+
+Zero-dependency (stdlib-only at import; jax strictly lazy) so it is usable
+from every layer — kernels' host glue, the store's prefetch thread, the
+jax-free report CLI.  See DESIGN.md, "Observability".
+
+  * :mod:`repro.obs.metrics` — process-global counters / gauges /
+    log-bucketed latency histograms, one canonical snapshot shape;
+  * :mod:`repro.obs.trace`   — nested host spans, Chrome trace-event
+    export (Perfetto), device ``sync`` helper, ``jax_profiler`` hook;
+  * :mod:`repro.obs.runlog`  — per-run manifest + JSONL events + metrics
+    snapshot, read back by ``launch/obs_report.py``;
+  * :mod:`repro.obs.session` — the shared ``--trace`` / ``--metrics``
+    driver glue.
+"""
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    registry,
+    snapshot,
+)
+from repro.obs.runlog import RunLog, load_run  # noqa: F401
+from repro.obs.trace import TRACER, Tracer, tracer  # noqa: F401

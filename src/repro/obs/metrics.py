@@ -1,0 +1,239 @@
+"""Process-global metrics registry: counters, gauges, latency histograms.
+
+One named home for every number the mining runtime wants to report — the
+per-phase times, load-balance gauges, cache hit counters and query-latency
+percentiles that used to live in five disjoint ad-hoc report shapes
+(``ClusterReport`` fields, ``CacheStats`` ints, driver ``print``\\ s).  All
+of them now flow through one :class:`MetricsRegistry` and come back out in
+ONE canonical snapshot dict shape (DESIGN.md, "Observability")::
+
+    {"counters":   {name: int},
+     "gauges":     {name: float},
+     "histograms": {name: {count, sum, mean, min, max, p50, p95, p99}}}
+
+Design constraints, in order:
+
+  * **zero dependencies** — stdlib only, importable from the jax-free CLI
+    (``launch/obs_report.py``) and from ``store/retry.py`` alike;
+  * **thread-safe** — the :class:`~repro.store.reader.BlockReader` prefetch
+    worker and the serving loop record concurrently with the main thread;
+  * **no sample retention** — :class:`Histogram` is log-bucketed: geometric
+    buckets of width ``growth`` (default 8 %) give p50/p95/p99 within
+    ``sqrt(growth)`` relative error of the exact nearest-rank percentile at
+    O(buckets) memory, any stream length (numpy-verified in
+    ``tests/test_obs.py`` on adversarial distributions);
+  * **near-zero when idle** — recording is one lock + int add; nothing is
+    formatted, allocated per-event, or written until :func:`snapshot`.
+
+Naming scheme: ``subsystem/metric`` with per-shard families spelled
+``subsystem/shard{p}/metric`` — flat strings, no label cardinality to
+manage, trivially diffable across runs by ``obs_report``.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, List, Optional
+
+
+class Counter:
+    """Monotonic event count (thread-safe)."""
+
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0
+        self._lock = threading.Lock()
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> int:
+        return self._value
+
+
+class Gauge:
+    """Last-written (or high-water) value of a quantity (thread-safe)."""
+
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = float(v)
+
+    def update_max(self, v: float) -> None:
+        """High-water semantics: keep the largest value ever seen."""
+        with self._lock:
+            if float(v) > self._value:
+                self._value = float(v)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Histogram:
+    """Log-bucketed distribution of a non-negative quantity.
+
+    Bucket ``i`` covers ``[growth**i, growth**(i+1))`` — relative, not
+    absolute, resolution, so one histogram spans nanoseconds to hours in a
+    few hundred ints.  ``percentile(q)`` walks the cumulative counts to the
+    nearest-rank sample's bucket and returns its geometric midpoint, clamped
+    to the exact observed ``[min, max]``: the estimate is within a
+    ``sqrt(growth)`` factor (≈ 4 % at the default) of
+    ``numpy.percentile(samples, q, method="nearest")``.  Exact ``count``,
+    ``sum``, ``min`` and ``max`` are kept on the side; values below
+    ``floor`` (and zeros) land in a dedicated underflow bucket.
+    """
+
+    __slots__ = ("name", "growth", "floor", "_log_g", "_buckets", "_zero",
+                 "_count", "_sum", "_min", "_max", "_lock")
+
+    def __init__(self, name: str, growth: float = 1.08, floor: float = 1e-9):
+        assert growth > 1.0, "bucket growth must be > 1"
+        self.name = name
+        self.growth = growth
+        self.floor = floor
+        self._log_g = math.log(growth)
+        self._buckets: Dict[int, int] = {}
+        self._zero = 0
+        self._count = 0
+        self._sum = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+        self._lock = threading.Lock()
+
+    def record(self, v: float) -> None:
+        v = float(v)
+        if v < 0.0 or v != v:          # negative or NaN: not a latency/size
+            raise ValueError(f"histogram {self.name}: bad sample {v!r}")
+        with self._lock:
+            self._count += 1
+            self._sum += v
+            if v < self._min:
+                self._min = v
+            if v > self._max:
+                self._max = v
+            if v < self.floor:
+                self._zero += 1
+            else:
+                i = int(math.floor(math.log(v) / self._log_g))
+                self._buckets[i] = self._buckets.get(i, 0) + 1
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    def percentile(self, q: float) -> Optional[float]:
+        """Nearest-rank percentile estimate; None on an empty histogram."""
+        with self._lock:
+            if self._count == 0:
+                return None
+            if self._count == 1:
+                return self._min
+            # nearest-rank index over the (conceptually sorted) samples
+            k = int(round((q / 100.0) * (self._count - 1)))
+            seen = self._zero
+            if k < seen:
+                return self._min
+            for i in sorted(self._buckets):
+                seen += self._buckets[i]
+                if k < seen:
+                    mid = math.exp((i + 0.5) * self._log_g)
+                    return min(max(mid, self._min), self._max)
+            return self._max
+
+    def summary(self) -> Dict[str, Optional[float]]:
+        empty = self._count == 0
+        return {
+            "count": self._count,
+            "sum": self._sum,
+            "mean": (self._sum / self._count) if not empty else None,
+            "min": None if empty else self._min,
+            "max": None if empty else self._max,
+            "p50": self.percentile(50),
+            "p95": self.percentile(95),
+            "p99": self.percentile(99),
+        }
+
+
+class MetricsRegistry:
+    """Named, typed, get-or-create metric store with one snapshot shape."""
+
+    def __init__(self):
+        self._metrics: Dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, name: str, cls, *args):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(name, *args)
+                self._metrics[name] = m
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as "
+                    f"{type(m).__name__}, requested {cls.__name__}"
+                )
+            return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str, growth: float = 1.08) -> Histogram:
+        return self._get(name, Histogram, growth)
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._metrics)
+
+    def snapshot(self) -> dict:
+        """The canonical dict shape every subsystem's stats reduce to."""
+        with self._lock:
+            items = list(self._metrics.items())
+        out = {"counters": {}, "gauges": {}, "histograms": {}}
+        for name, m in sorted(items):
+            if isinstance(m, Counter):
+                out["counters"][name] = m.value
+            elif isinstance(m, Gauge):
+                out["gauges"][name] = m.value
+            else:
+                out["histograms"][name] = m.summary()
+        return out
+
+    def reset(self) -> None:
+        with self._lock:
+            self._metrics.clear()
+
+
+#: The process-global registry every subsystem records into by default.
+REGISTRY = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    return REGISTRY
+
+
+def snapshot() -> dict:
+    return REGISTRY.snapshot()
+
+
+def reset() -> None:
+    """Drop every process-global metric (drivers call this at run start so
+    a run record contains exactly that run; tests call it for isolation)."""
+    REGISTRY.reset()

@@ -1,0 +1,156 @@
+"""Run records: a manifest + JSONL event log + metrics/trace files per run.
+
+Every observed run lands in one directory — the unit ``obs_report``
+summarizes, diffs and gates on::
+
+    run_dir/
+      manifest.json   # what ran: name, config, git SHA, backend, devices,
+                      # start time; finish() adds wall_s and any summary
+      events.jsonl    # append-only timeline of driver events (one JSON
+                      # object per line: {"t": rel_seconds, "kind": ..., ...})
+      metrics.json    # the registry's canonical snapshot at finish()
+      trace.json      # Chrome trace-event JSON (only when tracing was on)
+
+Everything here is stdlib-only and jax-free (backend detection is a
+guarded lazy import), so the report CLI can read run records in contexts
+where jax never loads — the same layering rule as ``launch/fsck.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+from typing import Optional
+
+MANIFEST = "manifest.json"
+EVENTS = "events.jsonl"
+METRICS = "metrics.json"
+TRACE = "trace.json"
+
+
+def git_sha(cwd: Optional[str] = None) -> Optional[str]:
+    """Best-effort HEAD SHA of the surrounding checkout (None outside git)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+            cwd=cwd or os.path.dirname(os.path.abspath(__file__)),
+        )
+        return out.stdout.strip() if out.returncode == 0 else None
+    except Exception:
+        return None
+
+
+def _backend_info() -> dict:
+    """Backend/device identity — only if jax is already importable/initialized
+    cheaply; a missing or broken jax must never break run recording."""
+    try:
+        import jax
+
+        devs = jax.devices()
+        return {
+            "backend": jax.default_backend(),
+            "device_kind": devs[0].device_kind if devs else None,
+            "n_devices": len(devs),
+        }
+    except Exception:
+        return {"backend": None, "device_kind": None, "n_devices": 0}
+
+
+class RunLog:
+    """One run's record: manifest at start, events during, metrics at end."""
+
+    def __init__(self, run_dir: str, name: str, config: Optional[dict] = None):
+        self.run_dir = run_dir
+        os.makedirs(run_dir, exist_ok=True)
+        self._t0 = time.monotonic()
+        self._lock = threading.Lock()
+        self.manifest = {
+            "name": name,
+            "config": _jsonable(config or {}),
+            "argv": sys.argv,
+            "git_sha": git_sha(),
+            "started_unix": time.time(),
+            **_backend_info(),
+        }
+        self._write_manifest()
+        self._events = open(os.path.join(run_dir, EVENTS), "a")
+
+    def _write_manifest(self) -> None:
+        path = os.path.join(self.run_dir, MANIFEST)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.manifest, f, indent=2)
+        os.replace(tmp, path)
+
+    def event(self, kind: str, **fields) -> None:
+        """Append one timeline event (relative seconds since run start)."""
+        rec = {"t": round(time.monotonic() - self._t0, 6), "kind": kind,
+               **_jsonable(fields)}
+        with self._lock:
+            self._events.write(json.dumps(rec) + "\n")
+            self._events.flush()
+
+    def finish(
+        self,
+        metrics_snapshot: Optional[dict] = None,
+        tracer=None,
+        **summary,
+    ) -> None:
+        """Seal the record: wall time + summary into the manifest, the
+        metrics snapshot to ``metrics.json``, the trace (if any) to
+        ``trace.json``."""
+        self.manifest["wall_s"] = time.monotonic() - self._t0
+        self.manifest.update(_jsonable(summary))
+        self._write_manifest()
+        if metrics_snapshot is not None:
+            with open(os.path.join(self.run_dir, METRICS), "w") as f:
+                json.dump(metrics_snapshot, f, indent=2)
+        if tracer is not None and tracer.enabled:
+            tracer.write(os.path.join(self.run_dir, TRACE))
+        with self._lock:
+            self._events.close()
+
+
+def _jsonable(obj):
+    """Best-effort plain-JSON projection (numpy scalars/arrays, tuples…)."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    if hasattr(obj, "item") and not hasattr(obj, "__len__"):  # numpy scalar
+        return obj.item()
+    if hasattr(obj, "tolist"):                                # numpy array
+        return obj.tolist()
+    return repr(obj)
+
+
+def load_run(run_dir: str) -> dict:
+    """Read a run record back: manifest, metrics, events, trace (if present).
+
+    Raises ``FileNotFoundError`` when ``manifest.json`` is missing — the
+    defining file of a run record.
+    """
+    with open(os.path.join(run_dir, MANIFEST)) as f:
+        out = {"run_dir": run_dir, "manifest": json.load(f)}
+    mpath = os.path.join(run_dir, METRICS)
+    out["metrics"] = None
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            out["metrics"] = json.load(f)
+    out["events"] = []
+    epath = os.path.join(run_dir, EVENTS)
+    if os.path.exists(epath):
+        with open(epath) as f:
+            out["events"] = [json.loads(ln) for ln in f if ln.strip()]
+    tpath = os.path.join(run_dir, TRACE)
+    out["trace"] = None
+    if os.path.exists(tpath):
+        with open(tpath) as f:
+            out["trace"] = json.load(f)
+    return out

@@ -1,0 +1,99 @@
+"""Shared ``--trace`` / ``--metrics`` observability flags for launchers.
+
+All four drivers (``mine``, ``cluster_mine``, ``stream_mine``,
+``serve_mine``) opt into the same run-record contract through two calls::
+
+    add_obs_flags(ap)                         # argparse: --trace/--metrics/
+                                              #           --jax-profile
+    obs = start_session(args, "cluster_mine") # None unless a flag was given
+    ...
+    if obs: obs.event("round", ...)           # driver timeline events
+    ...
+    if obs: obs.finish(n_fis=...)             # seal the run record
+
+``--metrics DIR`` records the run (manifest + events + metrics snapshot);
+``--trace DIR`` additionally enables the span tracer and writes the
+Perfetto-loadable ``trace.json``.  Both may name the same directory; the
+record layout is :mod:`repro.obs.runlog`'s.  ``--jax-profile DIR`` is the
+opt-in pass-through to ``jax.profiler`` for op-level device timing.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Optional
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.runlog import RunLog
+
+
+def add_obs_flags(ap: argparse.ArgumentParser) -> None:
+    g = ap.add_argument_group("observability")
+    g.add_argument("--trace", default="", metavar="DIR",
+                   help="record this run (manifest/events/metrics) to DIR "
+                        "with span tracing on; DIR/trace.json loads in "
+                        "Perfetto / chrome://tracing")
+    g.add_argument("--metrics", default="", metavar="DIR",
+                   help="record this run's manifest/events/metrics snapshot "
+                        "to DIR (no tracer overhead)")
+    g.add_argument("--jax-profile", default="", metavar="DIR",
+                   dest="jax_profile",
+                   help="also capture a jax.profiler device trace to DIR "
+                        "(TensorBoard/XProf)")
+
+
+class ObsSession:
+    """A run record plus the tracer/profiler lifetime bound to it."""
+
+    def __init__(self, run_dir: str, name: str, config: dict,
+                 trace_on: bool, jax_profile: str = ""):
+        # a fresh registry state so the record contains exactly this run
+        obs_metrics.reset()
+        self.tracer = obs_trace.tracer()
+        if trace_on:
+            self.tracer.clear()
+            self.tracer.enable()
+        self.log = RunLog(run_dir, name, config)
+        self._profiler = (
+            obs_trace.jax_profiler(jax_profile) if jax_profile else None
+        )
+        if self._profiler is not None:
+            self._profiler.__enter__()
+
+    @property
+    def run_dir(self) -> str:
+        return self.log.run_dir
+
+    def event(self, kind: str, **fields) -> None:
+        self.log.event(kind, **fields)
+
+    def finish(self, **summary) -> str:
+        if self._profiler is not None:
+            self._profiler.__exit__(None, None, None)
+            self._profiler = None
+        self.log.finish(
+            metrics_snapshot=obs_metrics.snapshot(),
+            tracer=self.tracer,
+            **summary,
+        )
+        if self.tracer.enabled:
+            self.tracer.disable()
+        print(f"obs: run record written to {self.run_dir}"
+              + (" (trace.json loads in Perfetto)" if "trace.json" in
+                 __import__("os").listdir(self.run_dir) else ""))
+        return self.run_dir
+
+
+def start_session(args, name: str,
+                  config: Optional[dict] = None) -> Optional[ObsSession]:
+    """Build the session the driver's flags ask for (None when neither)."""
+    run_dir = getattr(args, "trace", "") or getattr(args, "metrics", "")
+    if not run_dir:
+        return None
+    return ObsSession(
+        run_dir,
+        name,
+        config if config is not None else dict(vars(args)),
+        trace_on=bool(getattr(args, "trace", "")),
+        jax_profile=getattr(args, "jax_profile", ""),
+    )

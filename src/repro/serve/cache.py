@@ -15,11 +15,12 @@ cached results and the de-duplicated miss set that still needs a dispatch
 """
 from __future__ import annotations
 
-import dataclasses
 from collections import OrderedDict
 from typing import Any, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
 
 
 def query_key(kind: str, packed_row: np.ndarray, *knobs: Hashable) -> Tuple:
@@ -33,12 +34,56 @@ def query_key(kind: str, packed_row: np.ndarray, *knobs: Hashable) -> Tuple:
     return (kind, *knobs, np.asarray(packed_row, np.uint32).tobytes())
 
 
-@dataclasses.dataclass
 class CacheStats:
-    hits: int = 0
-    misses: int = 0
-    evictions: int = 0
-    invalidations: int = 0    # whole-cache clears (index hot-swaps)
+    """Per-cache counters as thin views over a metrics registry.
+
+    The counts live in a per-instance :class:`~repro.obs.metrics.
+    MetricsRegistry` — every cache keeps its own numbers, exactly as the old
+    plain-int dataclass did — and each event is mirrored into the
+    process-global registry under the same ``serve/cache/...`` names, so run
+    records and ``obs_report`` see cache behavior without any extra plumbing.
+    ``hits`` / ``misses`` / ``evictions`` / ``invalidations`` read exactly as
+    before; mutation goes through the ``hit()`` / ``miss()`` / … recorders.
+    """
+
+    def __init__(self, registry: Optional[obs_metrics.MetricsRegistry] = None):
+        self._reg = (
+            registry if registry is not None else obs_metrics.MetricsRegistry()
+        )
+
+    def _inc(self, field: str) -> None:
+        self._reg.counter(f"serve/cache/{field}").inc()
+        g = obs_metrics.registry()
+        if g is not self._reg:   # mirror unless we ARE the global registry
+            g.counter(f"serve/cache/{field}").inc()
+
+    def hit(self) -> None:
+        self._inc("hits")
+
+    def miss(self) -> None:
+        self._inc("misses")
+
+    def eviction(self) -> None:
+        self._inc("evictions")
+
+    def invalidation(self) -> None:   # whole-cache clears (index hot-swaps)
+        self._inc("invalidations")
+
+    @property
+    def hits(self) -> int:
+        return self._reg.counter("serve/cache/hits").value
+
+    @property
+    def misses(self) -> int:
+        return self._reg.counter("serve/cache/misses").value
+
+    @property
+    def evictions(self) -> int:
+        return self._reg.counter("serve/cache/evictions").value
+
+    @property
+    def invalidations(self) -> int:
+        return self._reg.counter("serve/cache/invalidations").value
 
     @property
     def lookups(self) -> int:
@@ -56,6 +101,10 @@ class CacheStats:
             "invalidations": self.invalidations,
             "hit_rate": self.hit_rate,
         }
+
+    def snapshot(self) -> Dict[str, dict]:
+        """This cache's counts in the canonical metrics-snapshot shape."""
+        return self._reg.snapshot()
 
 
 class QueryCache:
@@ -75,9 +124,9 @@ class QueryCache:
 
     def get(self, key: Tuple) -> Optional[Any]:
         if self.capacity <= 0 or key not in self._data:
-            self.stats.misses += 1
+            self.stats.miss()
             return None
-        self.stats.hits += 1
+        self.stats.hit()
         self._data.move_to_end(key)
         return self._data[key]
 
@@ -86,7 +135,7 @@ class QueryCache:
         dropped.  Hit/miss/eviction counters survive — only the data goes."""
         n = len(self._data)
         self._data.clear()
-        self.stats.invalidations += 1
+        self.stats.invalidation()
         return n
 
     def put(self, key: Tuple, value: Any) -> None:
@@ -97,7 +146,7 @@ class QueryCache:
         self._data[key] = value
         if len(self._data) > self.capacity:
             self._data.popitem(last=False)
-            self.stats.evictions += 1
+            self.stats.eviction()
 
     # -- batch helper ---------------------------------------------------------
     def split_batch(

@@ -38,6 +38,7 @@ FI/rule index (DESIGN.md, "Streaming subsystem": hot-swap protocol).
 from __future__ import annotations
 
 import functools
+import time
 from typing import Optional, Tuple
 
 import jax
@@ -46,6 +47,7 @@ import numpy as np
 
 from repro.core import rules as rules_mod
 from repro.kernels import ops
+from repro.obs import metrics as obs_metrics
 from repro.serve.index import FIIndex, RuleIndex
 
 NOT_FOUND = -1
@@ -242,9 +244,13 @@ class QueryEngine:
         generation counter and invalidates the attached cache.
         """
         assert index.n_items == self.index.n_items, "item universe changed"
+        t0 = time.perf_counter()
         self._state = (index, rules, self._state[2] + 1)
         if self.cache is not None:
             self.cache.clear()
+        reg = obs_metrics.registry()
+        reg.counter("serve/swaps").inc()
+        reg.histogram("serve/swap_ms").record((time.perf_counter() - t0) * 1e3)
         return self._state[2]
 
     def stats(self) -> dict:
@@ -256,7 +262,18 @@ class QueryEngine:
         }
         if self.cache is not None:
             out.update(self.cache.stats.as_dict())
+            obs_metrics.registry().gauge("serve/cache/hit_rate").set(
+                self.cache.stats.hit_rate
+            )
         return out
+
+    def _observe(self, kind: str, n: int, t0: float) -> None:
+        """One dispatched query batch → latency histogram + query counter."""
+        reg = obs_metrics.registry()
+        reg.counter("serve/queries").inc(n)
+        reg.histogram(f"serve/{kind}_ms").record(
+            (time.perf_counter() - t0) * 1e3
+        )
 
     def _pad(self, masks: np.ndarray, index: FIIndex) -> Tuple[jnp.ndarray, int]:
         q = np.asarray(masks, np.uint32)
@@ -269,10 +286,13 @@ class QueryEngine:
     def support(self, masks: np.ndarray) -> np.ndarray:
         """int32[n] supports (NOT_FOUND = not frequent / not indexed)."""
         index, _, _ = self._state
+        t0 = time.perf_counter()
         qp, n = self._pad(masks, index)
         sizes = _popcount_rows(qp)
         out = support_lookup(index, qp, sizes, force=self.force)
-        return np.asarray(out)[:n]
+        res = np.asarray(out)[:n]     # np.asarray is the device sync
+        self._observe("support", n, t0)
+        return res
 
     def rules_for(
         self, masks: np.ndarray, *, novel_only: bool = True
@@ -280,23 +300,29 @@ class QueryEngine:
         """(rule rows [n, k], confidences [n, k]) for basket masks."""
         index, rules, _ = self._state
         assert rules is not None, "engine built without a RuleIndex"
+        t0 = time.perf_counter()
         qp, n = self._pad(masks, index)
         rows, conf = top_rules_for_baskets(
             rules, qp, k=self.top_k, novel_only=novel_only,
             force=self.force,
         )
-        return np.asarray(rows)[:n], np.asarray(conf)[:n]
+        out = np.asarray(rows)[:n], np.asarray(conf)[:n]
+        self._observe("rules", n, t0)
+        return out
 
     def supersets(
         self, masks: np.ndarray, *, proper: bool = False
     ) -> Tuple[np.ndarray, np.ndarray]:
         """(FI rows [n, k], supports [n, k]) for itemset masks."""
         index, _, _ = self._state
+        t0 = time.perf_counter()
         qp, n = self._pad(masks, index)
         rows, supp = top_supersets(
             index, qp, k=self.top_k, proper=proper, force=self.force,
         )
-        return np.asarray(rows)[:n], np.asarray(supp)[:n]
+        out = np.asarray(rows)[:n], np.asarray(supp)[:n]
+        self._observe("supersets", n, t0)
+        return out
 
     # -- convenience: python itemsets in --------------------------------------
     def pack(self, itemsets) -> np.ndarray:

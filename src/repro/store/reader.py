@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Iterator, Optional, Tuple
 
@@ -32,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.store.retry import RetriesExhausted, RetryPolicy
 from repro.store.store import StoreIntegrityError, TxStore
 
@@ -109,6 +111,9 @@ class BlockReader:
             self._live[i] = arr.nbytes
             live = sum(self._live.values())
             self.peak_host_bytes = max(self.peak_host_bytes, live)
+            obs_metrics.registry().gauge("store/host_bytes_peak").update_max(
+                float(self.peak_host_bytes)
+            )
             if live > self.budget_bytes:
                 raise HostBudgetExceeded(
                     f"host residency {live}B exceeds budget "
@@ -135,11 +140,15 @@ class BlockReader:
         n = self.store.n_blocks
         if n == 0:
             return
+        reg = obs_metrics.registry()
+        stall_h = reg.histogram("store/prefetch_stall_s")
+        blocks_c = reg.counter("store/blocks_read")
         off = 0
         ex = ThreadPoolExecutor(max_workers=1)
         fut = ex.submit(self._read_host, 0)
         try:
             for i in range(n):
+                t_wait = time.perf_counter()
                 try:
                     arr = fut.result()
                 except _PASSTHROUGH:
@@ -149,6 +158,10 @@ class BlockReader:
                         f"prefetch of block {i} ({self._block_path(i)}) "
                         f"failed: {e!r}"
                     ) from e
+                # stall = how long the consumer blocked on the prefetch: ~0
+                # when the read hid behind the previous device sweep
+                stall_h.record(time.perf_counter() - t_wait)
+                blocks_c.inc()
                 if i + 1 < n:
                     fut = ex.submit(self._read_host, i + 1)
                 dev = self.retry.call(

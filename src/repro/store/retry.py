@@ -19,6 +19,8 @@ import dataclasses
 import time
 from typing import Callable, Tuple, Type, TypeVar
 
+from repro.obs import metrics as obs_metrics
+
 T = TypeVar("T")
 
 
@@ -57,15 +59,19 @@ class RetryPolicy:
         attempt count, and the elapsed time.
         """
         assert self.attempts >= 1
+        reg = obs_metrics.registry()
         t0 = self.clock()
         last: BaseException = None  # type: ignore[assignment]
         for k in range(self.attempts):
+            reg.counter("store/retry/attempts").inc()
             try:
                 return fn()
             except self.retry_on as e:
+                reg.counter("store/retry/retried_errors").inc()
                 last = e
                 if k + 1 < self.attempts:
                     self.sleep(self.delay(k))
+        reg.counter("store/retry/exhausted").inc()
         raise RetriesExhausted(
             f"{describe or 'operation'} failed after {self.attempts} "
             f"attempts over {self.clock() - t0:.3f}s: {last!r}"

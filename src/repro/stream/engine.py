@@ -30,6 +30,8 @@ import numpy as np
 
 from repro.core import bitmap as bm
 from repro.kernels import ops
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.cache import QueryCache
 from repro.serve.engine import QueryEngine
 from repro.serve.index import build_indexes
@@ -242,6 +244,9 @@ class StreamingMiner:
         self.monitor.admit(block)
         self.stats.blocks_in += 1
         self.stats.tx_in += self.window.block_tx
+        reg = obs_metrics.registry()
+        reg.counter("stream/blocks_in").inc()
+        reg.counter("stream/tx_in").inc(self.window.block_tx)
         ev = AdmitEvent(
             block_index=self.stats.blocks_in - 1,
             expired=expired is not None,
@@ -266,6 +271,7 @@ class StreamingMiner:
             counts = np.asarray(counts).astype(np.int64)
             self.current_supports += counts[0] - counts[1]
             ev.delta_applied = True
+            reg.counter("stream/delta_updates").inc()
 
         # drift-triggered re-mining is rate-limited: during a drift washout
         # the window keeps changing for B blocks, and re-mining every one of
@@ -285,6 +291,7 @@ class StreamingMiner:
                 self._remine("recovery", ev)
                 return self._stamp(ev)
             self.stats.drift_checks += 1
+            reg.counter("stream/drift_checks").inc()
             ev.verdict = self.monitor.check(
                 self._index_masks(),
                 current_rel=self.current_rel_supports(),
@@ -295,6 +302,12 @@ class StreamingMiner:
                     self.stats.fired_border += 1
                 else:
                     self.stats.fired_error += 1
+                reg.counter(f"stream/fired_{ev.verdict.reason}").inc()
+                obs_trace.TRACER.instant(
+                    "stream/drift",
+                    reason=ev.verdict.reason,
+                    block=ev.block_index,
+                )
                 self._remine(ev.verdict.reason, ev)
         return self._stamp(ev)
 
@@ -305,28 +318,35 @@ class StreamingMiner:
     def _remine(self, reason: str, ev: AdmitEvent) -> None:
         """Mine the current window, build standby indexes, hot-swap."""
         t0 = time.perf_counter()
-        fis = self.mine_fn(self.window, self.abs_minsup)
-        fi_idx, rule_idx = build_indexes(
-            fis,
-            self.n_items,
-            self.window.n_tx,
-            min_confidence=self.params.min_confidence,
-        )
+        with obs_trace.TRACER.span("stream/remine", reason=reason,
+                                   block=ev.block_index):
+            fis = self.mine_fn(self.window, self.abs_minsup)
+            fi_idx, rule_idx = build_indexes(
+                fis,
+                self.n_items,
+                self.window.n_tx,
+                min_confidence=self.params.min_confidence,
+            )
         ev.mine_ms = (time.perf_counter() - t0) * 1e3
 
         t0 = time.perf_counter()
-        if self.engine is None:
-            self.engine = QueryEngine(
-                fi_idx,
-                rule_idx,
-                batch=self.params.batch,
-                top_k=self.params.top_k,
-                force=self.params.force,
-                cache=self.cache,
-            )
-        else:
-            self.engine.swap_indexes(fi_idx, rule_idx)
+        with obs_trace.TRACER.span("stream/swap", reason=reason):
+            if self.engine is None:
+                self.engine = QueryEngine(
+                    fi_idx,
+                    rule_idx,
+                    batch=self.params.batch,
+                    top_k=self.params.top_k,
+                    force=self.params.force,
+                    cache=self.cache,
+                )
+            else:
+                self.engine.swap_indexes(fi_idx, rule_idx)
         ev.swap_ms = (time.perf_counter() - t0) * 1e3
+        reg = obs_metrics.registry()
+        reg.counter("stream/remines").inc()
+        reg.histogram("stream/mine_ms").record(ev.mine_ms)
+        reg.histogram("stream/swap_ms").record(ev.swap_ms)
 
         F = fi_idx.n_fis
         self.current_supports = (

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # CI gate (also the local pre-push check): tier-1 tests + smoke benchmarks
 # + the 4-host-device distributed-mining parity gate + the out-of-core
-# store parity gate + the fault-injection gate (kill-and-resume parity).
+# store parity gate + the fault-injection gate (kill-and-resume parity)
+# + the observability gate (traced run record + regression-gated report).
 #
 #   tools/check.sh            # everything
 #   tools/check.sh --tests    # tier-1 pytest only
@@ -9,6 +10,7 @@
 #   tools/check.sh --cluster  # 4-device cluster parity only
 #   tools/check.sh --store    # out-of-core store parity only
 #   tools/check.sh --faults   # fault-injection suite + kill/resume parity
+#   tools/check.sh --obs      # observability suite + trace/report gates
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -18,14 +20,16 @@ run_bench=1
 run_cluster=1
 run_store=1
 run_faults=1
+run_obs=1
 case "${1:-}" in
-  --tests) run_bench=0; run_cluster=0; run_store=0; run_faults=0 ;;
-  --bench) run_tests=0; run_cluster=0; run_store=0; run_faults=0 ;;
-  --cluster) run_tests=0; run_bench=0; run_store=0; run_faults=0 ;;
-  --store) run_tests=0; run_bench=0; run_cluster=0; run_faults=0 ;;
-  --faults) run_tests=0; run_bench=0; run_cluster=0; run_store=0 ;;
+  --tests) run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0 ;;
+  --bench) run_tests=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0 ;;
+  --cluster) run_tests=0; run_bench=0; run_store=0; run_faults=0; run_obs=0 ;;
+  --store) run_tests=0; run_bench=0; run_cluster=0; run_faults=0; run_obs=0 ;;
+  --faults) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_obs=0 ;;
+  --obs) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0 ;;
   "") ;;
-  *) echo "usage: tools/check.sh [--tests|--bench|--cluster|--store|--faults]" >&2; exit 2 ;;
+  *) echo "usage: tools/check.sh [--tests|--bench|--cluster|--store|--faults|--obs]" >&2; exit 2 ;;
 esac
 
 if [[ $run_tests -eq 1 ]]; then
@@ -67,6 +71,39 @@ if [[ $run_faults -eq 1 ]]; then
     --support 0.08 -P 4 --chunk 1 --checkpoint "$CKPT" --kill-after-round 0
   python -m repro.launch.cluster_mine --db T0.5I0.024P8PL5TL8 \
     --support 0.08 -P 4 --chunk 1 --checkpoint "$CKPT" --resume --parity
+fi
+
+if [[ $run_obs -eq 1 ]]; then
+  echo "== observability: metrics/tracer/runlog/report suite =="
+  python -m pytest -x -q tests/test_obs.py
+  echo "== observability: traced cluster mine -> Perfetto-loadable record =="
+  # a traced distributed mine must produce a complete run record: manifest,
+  # events, metrics snapshot (per-shard est/obs load), Chrome trace JSON
+  OBS_RUN="${OBS_RUN_DIR:-$(mktemp -d)/obs-run}"
+  python -m repro.launch.cluster_mine --db T0.5I0.024P8PL5TL8 \
+    --support 0.08 -P 4 --chunk 1 --trace "$OBS_RUN"
+  python -m repro.launch.obs_report summary "$OBS_RUN"
+  echo "== observability: diff gate (self-pass + injected-slowdown fail) =="
+  python -m repro.launch.obs_report diff "$OBS_RUN" "$OBS_RUN"
+  SLOW="$(mktemp -d)/obs-slow"
+  python -m repro.launch.obs_report inject-slowdown "$OBS_RUN" "$SLOW" \
+    --factor 1.5
+  # the injected regression MUST trip the gate (exit 1) — a silent pass
+  # here means the regression detector is broken
+  if python -m repro.launch.obs_report diff "$OBS_RUN" "$SLOW" \
+      --threshold 0.2; then
+    echo "obs gate FAILED: injected 1.5x slowdown was not detected" >&2
+    exit 1
+  fi
+  echo "== observability: benchmark overhead baselines =="
+  # parity-type overhead ratios (checksum, obs instrumentation) must stay
+  # within 5% of their no-op baselines in the recorded BENCH files
+  if ls BENCH_*.json >/dev/null 2>&1; then
+    python -m repro.launch.obs_report baseline --match overhead \
+      --threshold 0.05 $(ls BENCH_*.json | sed 's/^/--bench /')
+  else
+    echo "(no BENCH_*.json yet — run tools/check.sh --bench first)"
+  fi
 fi
 
 echo "check.sh: OK"
