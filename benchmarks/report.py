@@ -31,6 +31,18 @@ def _is_gate(key: str) -> bool:
     return "overhead" in key
 
 
+def _is_burn(key: str) -> bool:
+    """SLO error-budget burn rates (BENCH_serve ``slo_burn_rate``): a
+    sustained burn > 1.0 exhausts the budget within the window, so flag it
+    directly against 1.0 rather than the ratio threshold."""
+    return "burn_rate" in key
+
+
+def _is_speedup(key: str) -> bool:
+    """Higher-is-better multipliers (e.g. ``slo_microbatch_speedup``)."""
+    return key.endswith("_speedup")
+
+
 def bench_summary(root: Path = REPO, threshold: float = 0.05) -> str:
     """One markdown table over every ``BENCH_*.json`` under ``root``."""
     files = sorted(root.glob("BENCH_*.json"))
@@ -56,7 +68,13 @@ def bench_summary(root: Path = REPO, threshold: float = 0.05) -> str:
                     n_bad += bad
                     cells.append(f"{k}={v:.3f}x"
                                  + (" ⚠" if bad else " ✓"))
-                elif _is_ratio(k):
+                elif _is_burn(k):
+                    n_gates += 1
+                    bad = v > 1.0
+                    n_bad += bad
+                    cells.append(f"{k}={v:.3f}"
+                                 + (" ⚠" if bad else " ✓"))
+                elif _is_ratio(k) or _is_speedup(k):
                     cells.append(f"{k}={v:.3f}x")
                 else:
                     cells.append(f"{k}={v:.4g}")
@@ -65,7 +83,8 @@ def bench_summary(root: Path = REPO, threshold: float = 0.05) -> str:
                    f"{'  '.join(cells) or '—'} |")
     out.append(
         f"\n**{len(files)} benchmark files; {n_gates - n_bad}/{n_gates} "
-        f"overhead gates within {1 + threshold:.2f}x** "
+        f"overhead/burn gates ok (overhead <= {1 + threshold:.2f}x, "
+        f"burn <= 1.0)** "
         f"(gate mechanically: `python -m repro.launch.obs_report baseline "
         f"--match overhead --bench BENCH_*.json`)."
     )

@@ -164,6 +164,14 @@ def run(fast: bool = False, out_path: str = "BENCH_serve.json"):
         "fast": fast,
         "entries": entries,
     }
+    # serve_load merges its slo_* keys into the same file; keep them across
+    # microbenchmark reruns so the SLO gate history survives.
+    try:
+        prev = json.loads(Path(out_path).read_text())
+        payload.update({k: v for k, v in prev.items()
+                        if k.startswith("slo_") and k not in payload})
+    except (OSError, json.JSONDecodeError):
+        pass
     Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
     print(f"[wrote {out_path}: {len(entries)} entries]", flush=True)
     return entries

@@ -8,9 +8,11 @@ the accelerator stack, a post-mortem container.
 
 Subcommands::
 
-  summary RUN_DIR
-      Human-readable digest: manifest identity, driver event timeline,
-      the metric families, span time by name.
+  summary RUN_DIR [--format text|json|markdown]
+      Digest one run: manifest identity, driver event timeline, the metric
+      families, span time by name.  ``--format json`` emits the full digest
+      as machine-readable JSON; ``--format markdown`` renders tables for CI
+      step summaries.
 
   diff OLD_RUN NEW_RUN [--threshold 0.2]
       Compare two runs' time-like metrics (wall_s, */phase_ms/*, *_ms/*_s
@@ -108,54 +110,132 @@ def _span_totals(trace: Optional[dict]) -> List[Tuple[str, float, int]]:
     )
 
 
-def cmd_summary(args) -> int:
-    run = _load(args.run)
+def _summary_digest(run: dict) -> dict:
+    """The summary's content as one plain dict (every format renders it)."""
     man = run["manifest"]
-    print(f"run: {man.get('name')}  dir={run['run_dir']}")
-    print(f"  git={str(man.get('git_sha'))[:12]}  "
-          f"backend={man.get('backend')} x{man.get('n_devices')} "
-          f"({man.get('device_kind')})")
-    wall = man.get("wall_s")
-    print(f"  wall_s={wall:.3f}" if isinstance(wall, (int, float))
-          else "  wall_s=<unfinished>")
     extras = {
         k: v for k, v in man.items()
         if k not in ("name", "config", "argv", "git_sha", "started_unix",
                      "backend", "device_kind", "n_devices", "wall_s")
     }
-    if extras:
-        print("  summary: " + "  ".join(f"{k}={v}" for k, v in extras.items()))
-    if run["events"]:
-        print(f"events ({len(run['events'])}):")
-        for ev in run["events"][: args.events]:
+    m = run["metrics"] or {}
+    return {
+        "name": man.get("name"),
+        "run_dir": run["run_dir"],
+        "git_sha": man.get("git_sha"),
+        "backend": man.get("backend"),
+        "n_devices": man.get("n_devices"),
+        "device_kind": man.get("device_kind"),
+        "wall_s": man.get("wall_s"),
+        "summary": extras,
+        "events": run["events"],
+        "counters": m.get("counters") or {},
+        "gauges": m.get("gauges") or {},
+        "histograms": m.get("histograms") or {},
+        "spans": [
+            {"name": n, "total_ms": tot, "count": cnt}
+            for n, tot, cnt in _span_totals(run["trace"])
+        ],
+    }
+
+
+def _num(v) -> str:
+    return f"{v:.4g}" if isinstance(v, (int, float)) else str(v)
+
+
+def _render_markdown(d: dict, max_events: int, max_gauges: int) -> str:
+    """A CI-step-summary-friendly digest (GitHub-flavored markdown)."""
+    out = [f"### run `{d['name']}`",
+           "",
+           f"- dir: `{d['run_dir']}`  git: `{str(d['git_sha'])[:12]}`  "
+           f"backend: {d['backend']} ×{d['n_devices']} ({d['device_kind']})",
+           f"- wall_s: {_num(d['wall_s']) if d['wall_s'] is not None else '<unfinished>'}"]
+    if d["summary"]:
+        out.append("- " + "  ".join(f"{k}={_num(v)}"
+                                    for k, v in d["summary"].items()))
+    if d["events"]:
+        out += ["", f"#### events ({len(d['events'])})", "",
+                "| t (s) | kind | fields |", "|---|---|---|"]
+        for ev in d["events"][:max_events]:
+            rest = {k: v for k, v in ev.items() if k not in ("t", "kind")}
+            out.append(f"| {ev['t']:.3f} | {ev['kind']} | "
+                       + "  ".join(f"{k}={_num(v)}"
+                                   for k, v in rest.items()) + " |")
+    if d["counters"]:
+        out += ["", "#### counters", "", "| name | value |", "|---|---|"]
+        out += [f"| {k} | {v} |" for k, v in sorted(d["counters"].items())]
+    if d["gauges"]:
+        out += ["", "#### gauges", "", "| name | value |", "|---|---|"]
+        out += [f"| {k} | {_num(v)} |"
+                for k, v in sorted(d["gauges"].items())[:max_gauges]]
+    if d["histograms"]:
+        out += ["", "#### histograms", "",
+                "| name | n | mean | p50 | p95 | p99 | max |",
+                "|---|---|---|---|---|---|---|"]
+        out += [
+            f"| {k} | {s['count']} | {_num(s['mean'])} | {_num(s['p50'])} "
+            f"| {_num(s['p95'])} | {_num(s['p99'])} | {_num(s['max'])} |"
+            for k, s in sorted(d["histograms"].items())
+        ]
+    if d["spans"]:
+        out += ["", "#### trace spans", "",
+                "| span | total ms | count |", "|---|---|---|"]
+        out += [f"| {s['name']} | {s['total_ms']:.2f} | {s['count']} |"
+                for s in d["spans"][:12]]
+        out.append(f"\n(trace: `{d['run_dir']}/trace.json` — loads in "
+                   f"[ui.perfetto.dev](https://ui.perfetto.dev))")
+    return "\n".join(out)
+
+
+def cmd_summary(args) -> int:
+    run = _load(args.run)
+    d = _summary_digest(run)
+    if args.format == "json":
+        print(json.dumps(d, indent=2))
+        return 0
+    if args.format == "markdown":
+        print(_render_markdown(d, args.events, args.gauges))
+        return 0
+    print(f"run: {d['name']}  dir={d['run_dir']}")
+    print(f"  git={str(d['git_sha'])[:12]}  "
+          f"backend={d['backend']} x{d['n_devices']} "
+          f"({d['device_kind']})")
+    wall = d["wall_s"]
+    print(f"  wall_s={wall:.3f}" if isinstance(wall, (int, float))
+          else "  wall_s=<unfinished>")
+    if d["summary"]:
+        print("  summary: "
+              + "  ".join(f"{k}={v}" for k, v in d["summary"].items()))
+    if d["events"]:
+        print(f"events ({len(d['events'])}):")
+        for ev in d["events"][: args.events]:
             rest = {k: v for k, v in ev.items() if k not in ("t", "kind")}
             print(f"  t={ev['t']:>8.3f}s  {ev['kind']:<12} "
                   + " ".join(f"{k}={v}" for k, v in rest.items()))
-        if len(run["events"]) > args.events:
-            print(f"  ... {len(run['events']) - args.events} more")
-    m = run["metrics"] or {}
-    if m.get("counters"):
+        if len(d["events"]) > args.events:
+            print(f"  ... {len(d['events']) - args.events} more")
+    if d["counters"]:
         print("counters:")
-        for k, v in sorted(m["counters"].items()):
+        for k, v in sorted(d["counters"].items()):
             print(f"  {k} = {v}")
-    if m.get("gauges"):
-        print(f"gauges: {len(m['gauges'])} "
+    if d["gauges"]:
+        print(f"gauges: {len(d['gauges'])} "
               f"(use diff/baseline for comparisons)")
-        for k, v in sorted(m["gauges"].items())[: args.gauges]:
+        for k, v in sorted(d["gauges"].items())[: args.gauges]:
             print(f"  {k} = {v:.6g}")
-        if len(m["gauges"]) > args.gauges:
-            print(f"  ... {len(m['gauges']) - args.gauges} more")
-    if m.get("histograms"):
+        if len(d["gauges"]) > args.gauges:
+            print(f"  ... {len(d['gauges']) - args.gauges} more")
+    if d["histograms"]:
         print("histograms:")
-        for k, s in sorted(m["histograms"].items()):
+        for k, s in sorted(d["histograms"].items()):
             print(f"  {k}: n={s['count']} mean={s['mean']:.4g} "
                   f"p50={s['p50']:.4g} p95={s['p95']:.4g} max={s['max']:.4g}")
-    spans = _span_totals(run["trace"])
-    if spans:
+    if d["spans"]:
         print("trace spans (total ms):")
-        for name, tot, cnt in spans[:12]:
-            print(f"  {name:<28} {tot:>10.2f}ms  x{cnt}")
-        print(f"  -> load {run['run_dir']}/trace.json in "
+        for s in d["spans"][:12]:
+            print(f"  {s['name']:<28} {s['total_ms']:>10.2f}ms  "
+                  f"x{s['count']}")
+        print(f"  -> load {d['run_dir']}/trace.json in "
               f"https://ui.perfetto.dev or chrome://tracing")
     return 0
 
@@ -366,6 +446,10 @@ def main(argv: Optional[Iterable[str]] = None) -> int:
                    help="max driver events to print")
     s.add_argument("--gauges", type=int, default=24,
                    help="max gauges to print")
+    s.add_argument("--format", choices=("text", "json", "markdown"),
+                   default="text",
+                   help="output format (json: full machine-readable digest; "
+                        "markdown: CI step-summary tables)")
     s.set_defaults(fn=cmd_summary)
 
     d = sub.add_parser("diff", help="compare two runs; exit 1 on regression")

@@ -11,7 +11,10 @@ jax-free report CLI.  See DESIGN.md, "Observability".
   * :mod:`repro.obs.runlog`  — per-run manifest + JSONL events + metrics
     snapshot, read back by ``launch/obs_report.py``;
   * :mod:`repro.obs.session` — the shared ``--trace`` / ``--metrics``
-    driver glue.
+    driver glue (crash-safe: atexit/SIGTERM partial flush);
+  * :mod:`repro.obs.slo`     — sliding-window histograms/counters and the
+    SLO policy engine (windowed p50/p95/p99/QPS/shed-rate, error-budget
+    burn-rate alerts with hysteresis) behind the serving front end.
 """
 from repro.obs.metrics import (  # noqa: F401
     Counter,
@@ -22,4 +25,11 @@ from repro.obs.metrics import (  # noqa: F401
     snapshot,
 )
 from repro.obs.runlog import RunLog, load_run  # noqa: F401
+from repro.obs.slo import (  # noqa: F401
+    SLOPolicy,
+    SLOStatus,
+    SLOTracker,
+    WindowedCounter,
+    WindowedHistogram,
+)
 from repro.obs.trace import TRACER, Tracer, tracer  # noqa: F401

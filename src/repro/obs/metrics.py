@@ -136,6 +136,44 @@ class Histogram:
     def sum(self) -> float:
         return self._sum
 
+    def clear(self) -> None:
+        """Forget every sample (the sliding-window ring rotates on this)."""
+        with self._lock:
+            self._buckets.clear()
+            self._zero = 0
+            self._count = 0
+            self._sum = 0.0
+            self._min = math.inf
+            self._max = -math.inf
+
+    def merge_from(self, other: "Histogram") -> None:
+        """Fold ``other``'s samples into this histogram.
+
+        Exact for every summary field: bucket counts add, min/max take the
+        extremes, and the percentile walk over the summed buckets is the
+        walk over the union stream.  Requires equal ``growth`` (bucket
+        boundaries must line up).  Used by the sliding-window view
+        (:mod:`repro.obs.slo`) to merge its ring of rotation slots into one
+        last-W-seconds distribution.
+        """
+        assert other.growth == self.growth, "bucket geometries differ"
+        with other._lock:
+            buckets = dict(other._buckets)
+            zero, count = other._zero, other._count
+            total, lo, hi = other._sum, other._min, other._max
+        if count == 0:
+            return
+        with self._lock:
+            for i, n in buckets.items():
+                self._buckets[i] = self._buckets.get(i, 0) + n
+            self._zero += zero
+            self._count += count
+            self._sum += total
+            if lo < self._min:
+                self._min = lo
+            if hi > self._max:
+                self._max = hi
+
     def percentile(self, q: float) -> Optional[float]:
         """Nearest-rank percentile estimate; None on an empty histogram."""
         with self._lock:

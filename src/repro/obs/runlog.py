@@ -94,6 +94,34 @@ class RunLog:
             self._events.write(json.dumps(rec) + "\n")
             self._events.flush()
 
+    def flush_partial(
+        self,
+        metrics_snapshot: Optional[dict] = None,
+        tracer=None,
+        reason: str = "partial",
+    ) -> None:
+        """Write everything recorded SO FAR without sealing the record.
+
+        The crash path (:class:`~repro.obs.session.ObsSession`'s atexit /
+        SIGTERM hooks): a killed run still leaves a loadable
+        ``manifest.json`` (flagged ``partial`` with the reason),
+        ``metrics.json`` and ``trace.json`` next to the already-durable
+        ``events.jsonl``.  Idempotent; a later :meth:`finish` overwrites
+        the partial flag with the sealed summary.
+        """
+        self.manifest["wall_s"] = time.monotonic() - self._t0
+        self.manifest["partial"] = True
+        self.manifest["partial_reason"] = reason
+        self._write_manifest()
+        if metrics_snapshot is not None:
+            with open(os.path.join(self.run_dir, METRICS), "w") as f:
+                json.dump(metrics_snapshot, f, indent=2)
+        if tracer is not None and tracer.enabled:
+            tracer.write(os.path.join(self.run_dir, TRACE))
+        with self._lock:
+            if not self._events.closed:
+                self._events.flush()
+
     def finish(
         self,
         metrics_snapshot: Optional[dict] = None,
@@ -104,6 +132,8 @@ class RunLog:
         metrics snapshot to ``metrics.json``, the trace (if any) to
         ``trace.json``."""
         self.manifest["wall_s"] = time.monotonic() - self._t0
+        self.manifest.pop("partial", None)
+        self.manifest.pop("partial_reason", None)
         self.manifest.update(_jsonable(summary))
         self._write_manifest()
         if metrics_snapshot is not None:

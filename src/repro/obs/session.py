@@ -20,6 +20,9 @@ opt-in pass-through to ``jax.profiler`` for op-level device timing.
 from __future__ import annotations
 
 import argparse
+import atexit
+import signal
+import threading
 from typing import Optional
 
 from repro.obs import metrics as obs_metrics
@@ -43,7 +46,15 @@ def add_obs_flags(ap: argparse.ArgumentParser) -> None:
 
 
 class ObsSession:
-    """A run record plus the tracer/profiler lifetime bound to it."""
+    """A run record plus the tracer/profiler lifetime bound to it.
+
+    Crash-safe: construction registers an ``atexit`` hook and (when on the
+    main thread) a chaining ``SIGTERM`` handler, both of which flush the
+    partial record — manifest (flagged ``partial``), metrics snapshot,
+    trace — so a killed run still leaves a loadable, Perfetto-openable
+    record next to the already-durable ``events.jsonl``.  A normal
+    :meth:`finish` unregisters both and seals the record.
+    """
 
     def __init__(self, run_dir: str, name: str, config: dict,
                  trace_on: bool, jax_profile: str = ""):
@@ -59,6 +70,17 @@ class ObsSession:
         )
         if self._profiler is not None:
             self._profiler.__enter__()
+        self._finished = False
+        atexit.register(self._atexit_flush)
+        self._prev_sigterm = None
+        self._sigterm_installed = False
+        if threading.current_thread() is threading.main_thread():
+            try:
+                self._prev_sigterm = signal.signal(
+                    signal.SIGTERM, self._on_sigterm)
+                self._sigterm_installed = True
+            except (ValueError, OSError):   # no signals on this platform
+                pass
 
     @property
     def run_dir(self) -> str:
@@ -66,6 +88,40 @@ class ObsSession:
 
     def event(self, kind: str, **fields) -> None:
         self.log.event(kind, **fields)
+
+    # -- crash path -----------------------------------------------------------
+    def _flush_partial(self, reason: str) -> None:
+        if self._finished:
+            return
+        self.log.flush_partial(
+            metrics_snapshot=obs_metrics.snapshot(),
+            tracer=self.tracer,
+            reason=reason,
+        )
+
+    def _atexit_flush(self) -> None:
+        self._flush_partial("atexit")
+
+    def _on_sigterm(self, signum, frame) -> None:
+        self._flush_partial("sigterm")
+        self._finished = True
+        prev = self._prev_sigterm
+        if callable(prev):
+            prev(signum, frame)
+        # die with the conventional 128+SIGTERM status via the default
+        # disposition (atexit hooks have nothing left to do)
+        signal.signal(signal.SIGTERM, signal.SIG_DFL)
+        signal.raise_signal(signal.SIGTERM)
+
+    def _uninstall(self) -> None:
+        atexit.unregister(self._atexit_flush)
+        if self._sigterm_installed:
+            try:
+                signal.signal(
+                    signal.SIGTERM, self._prev_sigterm or signal.SIG_DFL)
+            except (ValueError, OSError):
+                pass
+            self._sigterm_installed = False
 
     def finish(self, **summary) -> str:
         if self._profiler is not None:
@@ -76,6 +132,8 @@ class ObsSession:
             tracer=self.tracer,
             **summary,
         )
+        self._finished = True
+        self._uninstall()
         if self.tracer.enabled:
             self.tracer.disable()
         print(f"obs: run record written to {self.run_dir}"

@@ -10,11 +10,24 @@ Turns a mined FI table into a queryable online service (DESIGN.md,
     (``repro.kernels.subset_query``); indexes are hot-swappable under
     traffic (generation counter, used by ``repro.stream``);
   * :mod:`repro.serve.cache`  — LRU query cache keyed on packed query
-    masks, with hit-rate counters and swap invalidation.
+    masks, with hit-rate counters and swap invalidation;
+  * :mod:`repro.serve.service` — the production front end over N replica
+    engines: arrival-stream micro-batching (flush on deadline or width),
+    bounded-queue admission control with typed ``Shed`` results, and
+    generation-consistent hot-swap across the replica fleet (DESIGN.md,
+    "Serving service & SLOs").
 
-End-to-end drivers: ``python -m repro.launch.serve_mine`` (static) and
-``python -m repro.launch.stream_mine`` (streaming).
+End-to-end drivers: ``python -m repro.launch.serve_mine`` (static),
+``python -m repro.launch.stream_mine`` (streaming), and
+``python -m repro.launch.serve_load`` (arrival-process load harness with
+live windowed SLO telemetry).
 """
 from repro.serve.cache import QueryCache  # noqa: F401
-from repro.serve.engine import QueryEngine  # noqa: F401
+from repro.serve.engine import EngineSnapshot, QueryEngine  # noqa: F401
 from repro.serve.index import FIIndex, RuleIndex  # noqa: F401
+from repro.serve.service import (  # noqa: F401
+    Failed,
+    MiningService,
+    Shed,
+    Ticket,
+)

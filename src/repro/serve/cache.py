@@ -56,6 +56,14 @@ class CacheStats:
         g = obs_metrics.registry()
         if g is not self._reg:   # mirror unless we ARE the global registry
             g.counter(f"serve/cache/{field}").inc()
+        if field in ("hits", "misses"):
+            # keep the hit-rate gauge current on the ACCESS path — a
+            # windowed SLO snapshot taken between stats() calls must never
+            # read a stale value
+            hr = self.hit_rate
+            self._reg.gauge("serve/cache/hit_rate").set(hr)
+            if g is not self._reg:
+                g.gauge("serve/cache/hit_rate").set(hr)
 
     def hit(self) -> None:
         self._inc("hits")

@@ -253,6 +253,19 @@ class QueryEngine:
         reg.histogram("serve/swap_ms").record((time.perf_counter() - t0) * 1e3)
         return self._state[2]
 
+    def snapshot(self) -> "EngineSnapshot":
+        """One coherent (index, rules, generation) view, frozen at call time.
+
+        The single-reference read extended to a *multi-call* consumer: the
+        micro-batching service (:mod:`repro.serve.service`) dispatches one
+        flush as several per-kind engine calls — each call alone is
+        torn-free, but a hot-swap landing between them would mix
+        generations inside one flush.  A snapshot pins every call of the
+        flush to the same state (and names the generation for cache keys
+        and trace args).
+        """
+        return EngineSnapshot(self, self._state)
+
     def stats(self) -> dict:
         index, rules, gen = self._state
         out = {
@@ -261,10 +274,9 @@ class QueryEngine:
             "n_rules": rules.n_rules if rules is not None else 0,
         }
         if self.cache is not None:
+            # hit_rate gauge is maintained on the access path (CacheStats);
+            # this merely reports the same numbers
             out.update(self.cache.stats.as_dict())
-            obs_metrics.registry().gauge("serve/cache/hit_rate").set(
-                self.cache.stats.hit_rate
-            )
         return out
 
     def _observe(self, kind: str, n: int, t0: float) -> None:
@@ -283,9 +295,9 @@ class QueryEngine:
         return jnp.asarray(_pad_to(q, self.batch)), n
 
     # -- typed entry points (packed masks in, numpy out) ---------------------
-    def support(self, masks: np.ndarray) -> np.ndarray:
+    def support(self, masks: np.ndarray, *, _state=None) -> np.ndarray:
         """int32[n] supports (NOT_FOUND = not frequent / not indexed)."""
-        index, _, _ = self._state
+        index, _, _ = _state if _state is not None else self._state
         t0 = time.perf_counter()
         qp, n = self._pad(masks, index)
         sizes = _popcount_rows(qp)
@@ -295,10 +307,10 @@ class QueryEngine:
         return res
 
     def rules_for(
-        self, masks: np.ndarray, *, novel_only: bool = True
+        self, masks: np.ndarray, *, novel_only: bool = True, _state=None
     ) -> Tuple[np.ndarray, np.ndarray]:
         """(rule rows [n, k], confidences [n, k]) for basket masks."""
-        index, rules, _ = self._state
+        index, rules, _ = _state if _state is not None else self._state
         assert rules is not None, "engine built without a RuleIndex"
         t0 = time.perf_counter()
         qp, n = self._pad(masks, index)
@@ -311,10 +323,10 @@ class QueryEngine:
         return out
 
     def supersets(
-        self, masks: np.ndarray, *, proper: bool = False
+        self, masks: np.ndarray, *, proper: bool = False, _state=None
     ) -> Tuple[np.ndarray, np.ndarray]:
         """(FI rows [n, k], supports [n, k]) for itemset masks."""
-        index, _, _ = self._state
+        index, _, _ = _state if _state is not None else self._state
         t0 = time.perf_counter()
         qp, n = self._pad(masks, index)
         rows, supp = top_supersets(
@@ -327,6 +339,48 @@ class QueryEngine:
     # -- convenience: python itemsets in --------------------------------------
     def pack(self, itemsets) -> np.ndarray:
         return rules_mod.pack_itemsets(list(itemsets), self.index.n_items)
+
+
+class EngineSnapshot:
+    """A :class:`QueryEngine` view pinned to one (index, rules, generation).
+
+    Same typed entry points as the engine; every call resolves against the
+    state captured by :meth:`QueryEngine.snapshot`, no matter how many
+    hot-swaps land meanwhile.  Cheap (one tuple reference) — take one per
+    service flush.
+    """
+
+    __slots__ = ("_engine", "_st")
+
+    def __init__(self, engine: QueryEngine, state):
+        self._engine = engine
+        self._st = state
+
+    @property
+    def index(self) -> FIIndex:
+        return self._st[0]
+
+    @property
+    def rules(self) -> Optional[RuleIndex]:
+        return self._st[1]
+
+    @property
+    def generation(self) -> int:
+        return self._st[2]
+
+    @property
+    def top_k(self) -> int:
+        return self._engine.top_k
+
+    def support(self, masks: np.ndarray) -> np.ndarray:
+        return self._engine.support(masks, _state=self._st)
+
+    def rules_for(self, masks: np.ndarray, *, novel_only: bool = True):
+        return self._engine.rules_for(
+            masks, novel_only=novel_only, _state=self._st)
+
+    def supersets(self, masks: np.ndarray, *, proper: bool = False):
+        return self._engine.supersets(masks, proper=proper, _state=self._st)
 
 
 def _pad_to(a: np.ndarray, n: int) -> np.ndarray:

@@ -518,6 +518,108 @@ def test_obs_report_is_jax_free():
     assert "JAXFREE_OK" in r.stdout
 
 
+def test_obs_report_summary_format_json(tmp_path, capsys):
+    d = _make_run(tmp_path / "run")
+    assert obs_report.main(["summary", d, "--format", "json"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["name"] == "testrun"
+    assert out["counters"]["fimi/runs"] == 1
+    assert out["gauges"]["fimi/n_fis"] == 123.0
+    assert out["histograms"]["store/prefetch_stall_s"]["count"] == 4
+    assert [e["kind"] for e in out["events"]] == ["round", "round"]
+    assert any(s["name"] == "fimi/phase4_mine" for s in out["spans"])
+
+
+def test_obs_report_summary_format_markdown(tmp_path, capsys):
+    d = _make_run(tmp_path / "run")
+    assert obs_report.main(["summary", d, "--format", "markdown"]) == 0
+    out = capsys.readouterr().out
+    assert "### run `testrun`" in out
+    assert "| fimi/runs | 1 |" in out
+    assert "store/prefetch_stall_s" in out
+    assert "fimi/phase4_mine" in out
+    # same digest, three renderings: text remains the default
+    assert obs_report.main(["summary", d]) == 0
+    assert "### run" not in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe sessions: a killed run still writes a loadable partial record
+# ---------------------------------------------------------------------------
+
+_VICTIM = """\
+import sys, time
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.session import ObsSession
+
+s = ObsSession(sys.argv[1], "victim", {"x": 1}, trace_on=True)
+obs_metrics.registry().counter("victim/progress").inc(3)
+with obs_trace.TRACER.span("victim/work"):
+    pass
+s.event("tick", n=1)
+print("READY", flush=True)
+@TAIL@
+"""
+
+
+def _spawn_victim(tmp_path, tail):
+    run_dir = tmp_path / "rec"
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _VICTIM.replace("@TAIL@", tail), str(run_dir)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        env={**os.environ, "PYTHONPATH": "src"}, cwd=str(REPO),
+    )
+    assert proc.stdout.readline().strip() == "READY"
+    return run_dir, proc
+
+
+def _assert_partial_record(run_dir, reason):
+    man = json.loads((run_dir / "manifest.json").read_text())
+    assert man["name"] == "victim"
+    assert man["partial"] is True and man["partial_reason"] == reason
+    assert isinstance(man["wall_s"], float)
+    metrics = json.loads((run_dir / "metrics.json").read_text())
+    assert metrics["counters"]["victim/progress"] == 3
+    trace = json.loads((run_dir / "trace.json").read_text())
+    _assert_chrome_trace(trace)
+    assert "victim/work" in {e["name"] for e in trace["traceEvents"]}
+    run = runlog.load_run(str(run_dir))
+    assert [e["kind"] for e in run["events"]] == ["tick"]
+
+
+def test_obs_session_sigterm_flushes_partial_record(tmp_path):
+    run_dir, proc = _spawn_victim(tmp_path, "time.sleep(120)")
+    proc.terminate()                      # SIGTERM mid-run
+    proc.wait(timeout=60)
+    # the chained default disposition preserves the conventional kill status
+    assert proc.returncode == -15
+    _assert_partial_record(run_dir, "sigterm")
+
+
+def test_obs_session_atexit_flushes_partial_record(tmp_path):
+    # the victim falls off the end of the script without calling finish()
+    run_dir, proc = _spawn_victim(tmp_path, "pass")
+    proc.wait(timeout=60)
+    assert proc.returncode == 0
+    _assert_partial_record(run_dir, "atexit")
+
+
+def test_obs_session_finish_seals_and_disarms_crash_hooks(tmp_path):
+    from repro.obs.session import ObsSession
+
+    s = ObsSession(str(tmp_path / "rec"), "ok", {}, trace_on=False)
+    obs_metrics.registry().counter("ok/n").inc()
+    s.finish(n_fis=7)
+    man = json.loads((tmp_path / "rec" / "manifest.json").read_text())
+    assert "partial" not in man and man["n_fis"] == 7
+    # the atexit hook is unregistered: simulating it must not resurrect
+    # the partial flag on the sealed record
+    s._atexit_flush()
+    man = json.loads((tmp_path / "rec" / "manifest.json").read_text())
+    assert "partial" not in man
+
+
 # ---------------------------------------------------------------------------
 # Driver smoke: --trace produces a loadable record end to end
 # ---------------------------------------------------------------------------

@@ -1,0 +1,296 @@
+"""MiningService front end: parity with the direct engine on all three
+query kinds, deterministic micro-batch coalescing, typed admission-control
+sheds, generation-consistent hot-swap across replicas, cache hits on the
+service path, per-request trace spans, and drain-on-stop semantics."""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.slo import SLOPolicy, SLOTracker
+from repro.serve import (
+    Failed,
+    MiningService,
+    QueryCache,
+    QueryEngine,
+    Shed,
+)
+from repro.serve.index import build_indexes
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    obs_metrics.reset()
+    obs_trace.TRACER.disable()
+    obs_trace.TRACER.clear()
+    yield
+    obs_metrics.reset()
+    obs_trace.TRACER.disable()
+    obs_trace.TRACER.clear()
+
+
+@pytest.fixture(scope="module")
+def indexed(request):
+    dense, db, minsup, oracle = request.getfixturevalue("small_db")
+    fi_idx, rule_idx = build_indexes(oracle, db.n_items, db.n_tx,
+                                     min_confidence=0.6)
+    return dense, db, oracle, fi_idx, rule_idx
+
+
+def _engine(indexed, **kw):
+    *_, fi_idx, rule_idx = indexed
+    kw.setdefault("batch", 32)
+    kw.setdefault("top_k", 5)
+    return QueryEngine(fi_idx, rule_idx, **kw)
+
+
+def _drain(svc, tickets, timeout=60.0):
+    return [t.result(timeout) for t in tickets]
+
+
+# ---------------------------------------------------------------------------
+# Parity: service answers == direct engine answers, all three kinds
+# ---------------------------------------------------------------------------
+
+
+def test_service_matches_direct_engine(indexed):
+    dense, db, oracle, *_ = indexed
+    engine = _engine(indexed)
+    sets = sorted(oracle, key=lambda s: (len(s), tuple(sorted(s))))[:12]
+    baskets = [frozenset(np.nonzero(dense[t])[0].tolist()) for t in range(8)]
+    set_masks = np.asarray(engine.pack(sets))
+    basket_masks = np.asarray(engine.pack(baskets))
+
+    want_supp = engine.support(set_masks)
+    want_rows, want_conf = engine.rules_for(basket_masks)
+    want_srows, want_ssupp = engine.supersets(set_masks)
+
+    with MiningService([engine], deadline_ms=2.0) as svc:
+        t_supp = [svc.submit("support", m) for m in set_masks]
+        t_rule = [svc.submit("rules", m) for m in basket_masks]
+        t_sup = [svc.submit("superset", m) for m in set_masks]
+        got_supp = _drain(svc, t_supp)
+        got_rule = _drain(svc, t_rule)
+        got_sup = _drain(svc, t_sup)
+
+    np.testing.assert_array_equal(got_supp, want_supp)
+    for i, (rows, conf) in enumerate(got_rule):
+        np.testing.assert_array_equal(rows, want_rows[i])
+        np.testing.assert_array_equal(conf, want_conf[i])  # NaN == NaN here
+    for i, (rows, supp) in enumerate(got_sup):
+        np.testing.assert_array_equal(rows, want_srows[i])
+        np.testing.assert_array_equal(supp, want_ssupp[i])
+
+
+def test_service_rejects_unknown_kind(indexed):
+    engine = _engine(indexed)
+    svc = MiningService([engine], auto_start=False)
+    with pytest.raises(AssertionError):
+        svc.submit("nope", np.zeros(engine.index.n_words, np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Micro-batching: a staged queue coalesces into one flush
+# ---------------------------------------------------------------------------
+
+
+def test_microbatch_coalesces_staged_queue(indexed):
+    dense, db, oracle, *_ = indexed
+    engine = _engine(indexed, batch=32)
+    sets = list(oracle)[:32]
+    masks = np.asarray(engine.pack(sets))
+    svc = MiningService([engine], deadline_ms=50.0, auto_start=False)
+    tickets = [svc.submit("support", m) for m in masks]
+    assert svc.stats()["queue_depth"] == 32
+    svc.start()
+    got = _drain(svc, tickets)
+    svc.stop()
+    np.testing.assert_array_equal(got, [oracle[s] for s in sets])
+    # 32 queued requests at width 32: exactly one flush, one full batch
+    st = svc.stats()
+    assert st["flushes"] == 1
+    snap = obs_metrics.snapshot()
+    assert snap["histograms"]["service/batch_fill"]["max"] == 32
+    assert snap["gauges"]["service/queue_depth"] == 32  # high-water
+
+
+def test_deadline_cuts_partial_batches(indexed):
+    engine = _engine(indexed, batch=32)
+    masks = np.asarray(engine.pack(list(indexed[2])[:3]))
+    with MiningService([engine], deadline_ms=2.0) as svc:
+        t0 = time.monotonic()
+        got = _drain(svc, [svc.submit("support", m) for m in masks])
+        dt = time.monotonic() - t0
+    assert all(isinstance(v, np.integer) for v in got)
+    assert dt < 30.0        # the deadline, not a full batch, cut the flush
+
+
+# ---------------------------------------------------------------------------
+# Admission control: typed sheds, never silent
+# ---------------------------------------------------------------------------
+
+
+def test_queue_full_sheds_typed(indexed):
+    engine = _engine(indexed)
+    oracle = indexed[2]
+    masks = np.asarray(engine.pack(list(oracle)[:3]))
+    slo = SLOTracker(SLOPolicy())
+    svc = MiningService([engine], max_queue=2, auto_start=False, slo=slo)
+    t1 = svc.submit("support", masks[0])
+    t2 = svc.submit("support", masks[1])
+    t3 = svc.submit("support", masks[2])         # over max_queue: shed NOW
+    assert t3.done() and not t1.done() and not t2.done()
+    out = t3.result(0)
+    assert isinstance(out, Shed)
+    assert out.reason == "queue_full" and out.queue_depth == 2
+    assert obs_metrics.snapshot()["counters"]["service/shed"] == 1
+    assert slo.evaluate().shed == 1
+    svc.start()
+    assert not isinstance(t1.result(60), Shed)
+    svc.stop()
+
+
+def test_stop_without_drain_sheds_queue(indexed):
+    engine = _engine(indexed)
+    masks = np.asarray(engine.pack(list(indexed[2])[:4]))
+    svc = MiningService([engine], auto_start=False)
+    tickets = [svc.submit("support", m) for m in masks]
+    svc.stop(drain=False)
+    for t in tickets:
+        out = t.result(0)
+        assert isinstance(out, Shed) and out.reason == "shutdown"
+    with pytest.raises(RuntimeError):
+        svc.submit("support", masks[0])
+
+
+def test_stop_with_drain_resolves_everything(indexed):
+    engine = _engine(indexed, batch=8)
+    oracle = indexed[2]
+    sets = list(oracle)[:20]
+    masks = np.asarray(engine.pack(sets))
+    svc = MiningService([engine], deadline_ms=100.0, auto_start=False)
+    tickets = [svc.submit("support", m) for m in masks]
+    svc.start()
+    svc.stop(drain=True)
+    got = [t.result(0) for t in tickets]         # all resolved already
+    np.testing.assert_array_equal(got, [oracle[s] for s in sets])
+
+
+# ---------------------------------------------------------------------------
+# Replicas + generation-consistent hot swap
+# ---------------------------------------------------------------------------
+
+
+def test_round_robin_spreads_flushes(indexed):
+    engine_a = _engine(indexed, batch=4)
+    engine_b = _engine(indexed, batch=4)
+    masks = np.asarray(engine_a.pack(list(indexed[2])[:16]))
+    svc = MiningService([engine_a, engine_b], auto_start=False)
+    tickets = [svc.submit("support", m) for m in masks]
+    svc.start()
+    _drain(svc, tickets)
+    svc.stop()
+    st = svc.stats()
+    assert st["replicas"] == 2
+    assert sum(st["per_replica_flushes"]) == st["flushes"] >= 4
+    assert all(f > 0 for f in st["per_replica_flushes"])
+    assert sum(st["per_replica_requests"]) == 16
+
+
+def test_hot_swap_is_generation_consistent(indexed):
+    dense, db, oracle, *_ = indexed
+    cache = QueryCache(64)
+    engines = [_engine(indexed), _engine(indexed)]
+    # standby pair: only the singleton itemsets survive
+    small = {f: s for f, s in oracle.items() if len(f) == 1}
+    idx2, rules2 = build_indexes(small, db.n_items, db.n_tx,
+                                 min_confidence=0.6)
+    doomed = max(oracle, key=len)                # gone after the swap
+    mask = np.asarray(engines[0].pack([doomed]))[0]
+    with MiningService(engines, cache=cache, deadline_ms=2.0) as svc:
+        assert svc.generation == 0
+        assert svc.submit("support", mask).result(60) == oracle[doomed]
+        assert len(cache) > 0
+        gen = svc.swap_indexes(idx2, rules2)
+        assert gen == svc.generation == 1
+        assert {e.generation for e in svc.engines} == {1}
+        assert len(cache) == 0                   # swap invalidated the cache
+        assert cache.stats.invalidations == 1
+        # the old answer is gone on EVERY replica (round-robin hits both)
+        for _ in range(4):
+            assert svc.submit("support", mask).result(60) == -1
+    # a replica fleet must refuse to construct on diverged generations
+    engines[0].swap_indexes(idx2, rules2)
+    with pytest.raises(AssertionError):
+        MiningService(engines, auto_start=False)
+
+
+def test_cache_serves_repeats_and_updates_hit_rate_gauge(indexed):
+    dense, db, oracle, *_ = indexed
+    engine = _engine(indexed)
+    cache = QueryCache(64)
+    mask = np.asarray(engine.pack([next(iter(oracle))]))[0]
+    with MiningService([engine], cache=cache, deadline_ms=2.0) as svc:
+        first = svc.submit("support", mask).result(60)
+        second = svc.submit("support", mask).result(60)
+    assert first == second
+    assert cache.stats.hits >= 1
+    # the hit-rate gauge is maintained on the ACCESS path — visible in a
+    # plain snapshot without anyone calling stats()
+    g = obs_metrics.snapshot()["gauges"]
+    assert g["serve/cache/hit_rate"] == pytest.approx(cache.stats.hit_rate)
+
+
+# ---------------------------------------------------------------------------
+# Per-request tracing: ids flow enqueue -> assemble -> sweep -> respond
+# ---------------------------------------------------------------------------
+
+
+def test_per_request_spans_share_request_ids(indexed):
+    engine = _engine(indexed)
+    masks = np.asarray(engine.pack(list(indexed[2])[:6]))
+    tr = obs_trace.TRACER
+    tr.enable()
+    svc = MiningService([engine], deadline_ms=20.0, auto_start=False)
+    tickets = [svc.submit("support", m) for m in masks]
+    svc.start()
+    _drain(svc, tickets)
+    svc.stop()
+    tr.disable()
+    out = json.loads(json.dumps(tr.export()))    # byte round-trip
+    assert isinstance(out["traceEvents"], list)  # Perfetto shape
+    spans = [e for e in out["traceEvents"] if e.get("ph") == "X"]
+    by_name = {}
+    for e in spans:
+        by_name.setdefault(e["name"], []).append(e)
+    ids = {t.id for t in tickets}
+    # one queue-wait span per request, carrying its id
+    enq = by_name["service/enqueue"]
+    assert {e["args"]["req"] for e in enq} == ids
+    assert all(e["dur"] >= 0 for e in enq)
+    # batch spans carry the member ids; the same ids appear at every stage
+    for stage in ("service/flush", "service/assemble", "service/sweep",
+                  "service/respond"):
+        stage_ids = {i for e in by_name[stage] for i in e["args"]["reqs"]}
+        assert stage_ids == ids, stage
+    # the queue lane is a named virtual track
+    tracks = {e["args"]["name"] for e in out["traceEvents"]
+              if e.get("ph") == "M"}
+    assert "service/replica0/queue" in tracks
+
+
+def test_slo_tracker_fed_by_service(indexed):
+    engine = _engine(indexed)
+    masks = np.asarray(engine.pack(list(indexed[2])[:8]))
+    slo = SLOTracker(SLOPolicy(p99_ms=60_000.0, min_requests=1))
+    with MiningService([engine], slo=slo, deadline_ms=2.0) as svc:
+        _drain(svc, [svc.submit("support", m) for m in masks])
+    st = slo.evaluate()
+    assert st.served == 8 and st.shed == 0 and st.errors == 0
+    assert st.p99_ms is not None and st.p99_ms > 0
+    assert not st.alert_active
+    snap = obs_metrics.snapshot()
+    assert snap["histograms"]["service/latency_ms"]["count"] == 8

@@ -1,0 +1,238 @@
+"""Sliding-window SLO engine: windowed histogram percentiles vs the numpy
+nearest-rank oracle over rotating windows, windowed counter rates, and the
+burn-rate / latency alert state machines (hysteresis, exactly-once
+transitions, min-request noise guard) — all on a fake clock."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.obs.slo import (
+    SLOPolicy,
+    SLOTracker,
+    WindowedCounter,
+    WindowedHistogram,
+)
+
+#: documented histogram error bound: bucket midpoint within sqrt(growth)
+FACTOR = math.sqrt(1.08) * (1 + 1e-9)
+
+
+class FakeClock:
+    def __init__(self, t: float = 100.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _oracle(samples, q):
+    return float(np.percentile(np.asarray(samples, float), q,
+                               method="nearest"))
+
+
+def _assert_close_percentiles(wh, samples):
+    for q in (50, 95, 99):
+        want = _oracle(samples, q)
+        got = wh.percentile(q)
+        assert got is not None
+        assert want / FACTOR <= got <= want * FACTOR, (
+            f"q={q}: got {got}, oracle {want} over {len(samples)} live"
+        )
+
+
+# ---------------------------------------------------------------------------
+# WindowedHistogram: the merged ring vs numpy over exactly the live samples
+# ---------------------------------------------------------------------------
+
+
+def test_windowed_histogram_matches_numpy_while_rotating():
+    clk = FakeClock()
+    wh = WindowedHistogram("t/lat", window_s=30.0, slots=6, clock=clk)
+    rotate = 30.0 / 6
+    rng = np.random.default_rng(3)
+    live = []  # (absolute slot k, value)
+    # 18 rotations: every sample's slot index is floor(elapsed / rotate)
+    for k in range(18):
+        for v in rng.lognormal(0.0, 1.5, size=40):
+            wh.record(float(v))
+            live.append((k, float(v)))
+        # the live window covers slots (k-5 .. k): older cells were cleared
+        window = [v for kk, v in live if kk > k - 6]
+        assert wh.count == len(window)
+        _assert_close_percentiles(wh, window)
+        clk.advance(rotate)
+
+
+def test_windowed_histogram_empty_and_expiry():
+    clk = FakeClock()
+    wh = WindowedHistogram("t/lat", window_s=10.0, slots=5, clock=clk)
+    assert wh.count == 0 and wh.percentile(99) is None
+    s = wh.summary()
+    assert s["count"] == 0 and s["p99"] is None
+    wh.record(7.0)
+    assert wh.count == 1 and wh.percentile(50) == 7.0
+    # a gap longer than the window leaves the ring empty again
+    clk.advance(10.0)
+    assert wh.count == 0 and wh.percentile(50) is None
+
+
+def test_windowed_histogram_burst_in_one_rotation():
+    """A burst confined to one slot survives exactly until its cell expires:
+    present through window_s - rotate_s, gone at window_s."""
+    clk = FakeClock()
+    wh = WindowedHistogram("t/lat", window_s=12.0, slots=4, clock=clk)
+    for _ in range(100):
+        wh.record(50.0)
+    clk.advance(12.0 - 3.0)        # burst cell is the oldest live slot
+    assert wh.count == 100
+    assert wh.percentile(99) == 50.0
+    clk.advance(3.0)               # now a full window has elapsed
+    assert wh.count == 0
+
+
+def test_windowed_counter_value_and_rate():
+    clk = FakeClock()
+    wc = WindowedCounter("t/served", window_s=10.0, slots=5, clock=clk)
+    assert wc.value == 0 and wc.rate() == 0.0
+    wc.inc(20)
+    clk.advance(2.0)
+    wc.inc(10)
+    # coverage ramps with elapsed time until it saturates at window_s
+    assert wc.value == 30
+    assert wc.rate() == pytest.approx(30 / 2.0)
+    clk.advance(8.0)               # first cell (t=0) just expired
+    assert wc.value == 10
+    assert wc.rate() == pytest.approx(10 / 10.0)
+    clk.advance(10.0)
+    assert wc.value == 0
+
+
+# ---------------------------------------------------------------------------
+# SLOTracker: burn-rate + latency alerts, hysteresis, exactly-once edges
+# ---------------------------------------------------------------------------
+
+
+def _policy(**kw):
+    base = dict(p99_ms=50.0, availability=0.9, window_s=30.0, slots=6,
+                burn_hi=2.0, burn_lo=1.0, latency_clear=0.8,
+                min_requests=10)
+    base.update(kw)
+    return SLOPolicy(**base)
+
+
+def test_burn_rate_alert_fires_once_and_clears_with_hysteresis():
+    clk = FakeClock()
+    slo = SLOTracker(_policy(), clock=clk)
+    fired = []
+    slo.on_alert(fired.append)
+
+    # healthy window: budget 0.1, zero bad -> burn 0
+    for _ in range(40):
+        slo.record_ok(5.0)
+    st = slo.evaluate()
+    assert st.burn_rate == 0.0 and st.availability_ok and not st.events
+
+    # 30% shed -> burn 3.0 >= burn_hi 2.0: fires exactly once
+    for _ in range(18):
+        slo.record_shed()
+    st = slo.evaluate()
+    assert st.burn_rate == pytest.approx((18 / 58) / 0.1)
+    assert st.alert_active and not st.availability_ok
+    assert [e["kind"] for e in st.events] == ["slo_alert"]
+    assert st.events[0]["objective"] == "availability"
+    assert slo.evaluate().events == []          # edge, not level
+
+    # hover in the hysteresis band (burn_lo <= burn < burn_hi): no flap
+    clk.advance(31.0)                           # drain the window
+    for _ in range(85):
+        slo.record_ok(5.0)
+    for _ in range(15):
+        slo.record_shed()                       # burn 1.5
+    st = slo.evaluate()
+    assert 1.0 <= st.burn_rate < 2.0
+    assert st.alert_active and st.events == []
+
+    # drop below burn_lo: clears exactly once
+    clk.advance(31.0)
+    for _ in range(50):
+        slo.record_ok(5.0)
+    st = slo.evaluate()
+    assert not st.alert_active
+    assert [e["kind"] for e in st.events] == ["slo_clear"]
+    assert slo.evaluate().events == []
+    assert [e["kind"] for e in fired] == ["slo_alert", "slo_clear"]
+
+
+def test_latency_alert_hysteresis():
+    clk = FakeClock()
+    slo = SLOTracker(_policy(), clock=clk)      # objective p99 50ms
+    for _ in range(30):
+        slo.record_ok(100.0)                    # constant -> p99 exactly 100
+    st = slo.evaluate()
+    assert not st.latency_ok and st.alert_active
+    assert [(e["kind"], e["objective"]) for e in st.events] == [
+        ("slo_alert", "latency")]
+
+    # between clear (40ms) and objective (50ms): stays active, no re-fire
+    clk.advance(31.0)
+    for _ in range(30):
+        slo.record_ok(45.0)
+    st = slo.evaluate()
+    assert st.latency_ok and st.alert_active and st.events == []
+
+    # below latency_clear * objective: clears
+    clk.advance(31.0)
+    for _ in range(30):
+        slo.record_ok(10.0)
+    st = slo.evaluate()
+    assert not st.alert_active
+    assert [e["kind"] for e in st.events] == ["slo_clear"]
+
+
+def test_min_requests_guards_noise():
+    clk = FakeClock()
+    slo = SLOTracker(_policy(min_requests=10), clock=clk)
+    for _ in range(3):
+        slo.record_shed()                       # 100% bad, but only 3 reqs
+    st = slo.evaluate()
+    assert st.burn_rate > 2.0                   # the ratio itself is huge...
+    assert st.availability_ok and not st.alert_active and not st.events
+
+
+def test_errors_count_against_budget_and_status_rates():
+    clk = FakeClock()
+    slo = SLOTracker(_policy(), clock=clk)
+    clk.advance(10.0)                           # coverage = 10s
+    for _ in range(80):
+        slo.record_ok(5.0)
+    for _ in range(10):
+        slo.record_error()
+    for _ in range(10):
+        slo.record_shed()
+    st = slo.evaluate()
+    assert (st.total, st.served, st.shed, st.errors) == (100, 80, 10, 10)
+    assert st.shed_rate == pytest.approx(0.2)
+    assert st.burn_rate == pytest.approx(2.0)
+    assert st.qps == pytest.approx(8.0)
+    assert st.offered_qps == pytest.approx(10.0)
+    assert not st.availability_ok               # burn at burn_hi fires
+
+
+def test_alerts_since_filters_fires_by_time():
+    clk = FakeClock()
+    slo = SLOTracker(_policy(), clock=clk)
+    for _ in range(20):
+        slo.record_shed()
+    slo.evaluate()                              # fire at t=100
+    t_fire = clk.t
+    clk.advance(31.0)
+    for _ in range(50):
+        slo.record_ok(1.0)
+    slo.evaluate()                              # clear at t=131
+    assert len(slo.alerts) == 2
+    assert [e["kind"] for e in slo.alerts_since(0.0)] == ["slo_alert"]
+    assert slo.alerts_since(t_fire + 1.0) == []

@@ -2,7 +2,8 @@
 # CI gate (also the local pre-push check): tier-1 tests + smoke benchmarks
 # + the 4-host-device distributed-mining parity gate + the out-of-core
 # store parity gate + the fault-injection gate (kill-and-resume parity)
-# + the observability gate (traced run record + regression-gated report).
+# + the observability gate (traced run record + regression-gated report)
+# + the serving SLO gate (load harness within SLO + overload self-test).
 #
 #   tools/check.sh            # everything
 #   tools/check.sh --tests    # tier-1 pytest only
@@ -11,6 +12,7 @@
 #   tools/check.sh --store    # out-of-core store parity only
 #   tools/check.sh --faults   # fault-injection suite + kill/resume parity
 #   tools/check.sh --obs      # observability suite + trace/report gates
+#   tools/check.sh --serve    # serving SLO gate + overload self-test
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -21,15 +23,17 @@ run_cluster=1
 run_store=1
 run_faults=1
 run_obs=1
+run_serve=1
 case "${1:-}" in
-  --tests) run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0 ;;
-  --bench) run_tests=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0 ;;
-  --cluster) run_tests=0; run_bench=0; run_store=0; run_faults=0; run_obs=0 ;;
-  --store) run_tests=0; run_bench=0; run_cluster=0; run_faults=0; run_obs=0 ;;
-  --faults) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_obs=0 ;;
-  --obs) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0 ;;
+  --tests) run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_serve=0 ;;
+  --bench) run_tests=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_serve=0 ;;
+  --cluster) run_tests=0; run_bench=0; run_store=0; run_faults=0; run_obs=0; run_serve=0 ;;
+  --store) run_tests=0; run_bench=0; run_cluster=0; run_faults=0; run_obs=0; run_serve=0 ;;
+  --faults) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_obs=0; run_serve=0 ;;
+  --obs) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_serve=0 ;;
+  --serve) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0 ;;
   "") ;;
-  *) echo "usage: tools/check.sh [--tests|--bench|--cluster|--store|--faults|--obs]" >&2; exit 2 ;;
+  *) echo "usage: tools/check.sh [--tests|--bench|--cluster|--store|--faults|--obs|--serve]" >&2; exit 2 ;;
 esac
 
 if [[ $run_tests -eq 1 ]]; then
@@ -103,6 +107,36 @@ if [[ $run_obs -eq 1 ]]; then
       --threshold 0.05 $(ls BENCH_*.json | sed 's/^/--bench /')
   else
     echo "(no BENCH_*.json yet — run tools/check.sh --bench first)"
+  fi
+fi
+
+if [[ $run_serve -eq 1 ]]; then
+  echo "== serving: SLO/service suites =="
+  python -m pytest -x -q tests/test_slo.py tests/test_service.py \
+    tests/test_serve_load.py
+  echo "== serving: SLO-gated load harness at modest QPS =="
+  # a traced, gated load run must sustain the target within the windowed
+  # p99 objective (exit 0), record slo_* keys into BENCH_serve.json, and
+  # leave a Perfetto-loadable per-request timeline in the run record
+  SERVE_RUN="${SERVE_RUN_DIR:-$(mktemp -d)/serve-run}"
+  python -m repro.launch.serve_load --qps 200 --duration 5 --ramp 2 \
+    --window 3 --gate --no-dashboard --compare-dispatch \
+    --trace "$SERVE_RUN"
+  python -m repro.launch.obs_report summary "$SERVE_RUN"
+  # the timeline must contain the device-sweep spans of the request chain
+  if ! grep -q 'service/sweep' "$SERVE_RUN/trace.json"; then
+    echo "serve gate FAILED: no service/sweep spans in trace" >&2
+    exit 1
+  fi
+  echo "== serving: injected overload must trip the burn-rate alert =="
+  # a target far past capacity with a tiny queue must shed, burn the error
+  # budget, fire the alert, and exit non-zero — a pass here means the SLO
+  # alerting is broken
+  if python -m repro.launch.serve_load --qps 50000 --max-queue 64 \
+      --duration 4 --ramp 1 --window 2 --gate --no-dashboard \
+      --bench-out ""; then
+    echo "serve gate FAILED: injected overload did not trip the SLO" >&2
+    exit 1
   fi
 fi
 
