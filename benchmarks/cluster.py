@@ -27,12 +27,15 @@ import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 import jax  # noqa: E402
 
 from repro import cluster  # noqa: E402
 from repro.core import eclat, fimi  # noqa: E402
 from repro.data.ibm_gen import IBMParams, generate_dense  # noqa: E402
+
+from benchmarks.report import bench_meta  # noqa: E402
 
 SUPPORT = 0.1
 SEED = 7
@@ -137,6 +140,7 @@ def run(fast: bool = False, out_path: str = "BENCH_cluster.json"):
         "fast": fast,
         "speedup_1_to_4": speedups[4],
         "rebalance_improvement": improvement,
+        "meta": bench_meta(backend=jax.default_backend()),
         "entries": entries,
     }
     Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")

@@ -32,6 +32,7 @@ from pathlib import Path
 import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 import jax  # noqa: E402
 
@@ -39,6 +40,8 @@ from repro.core import eclat, fimi  # noqa: E402
 from repro.data.ibm_gen import IBMParams, generate_blocks  # noqa: E402
 from repro.store import TxStore, write_ibm_store  # noqa: E402
 from repro.store.reader import to_device_shards  # noqa: E402
+
+from benchmarks.report import bench_meta  # noqa: E402
 
 P = 4
 
@@ -216,6 +219,7 @@ def run(fast: bool = False, out_path: str = "BENCH_io.json"):
         "checksum_overhead_streamed": checksum_overhead,
         "obs_overhead_streamed": obs_overhead,
         "parity": True,
+        "meta": bench_meta(backend=jax.default_backend()),
         "entries": entries,
     }
     Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")

@@ -27,9 +27,12 @@ from pathlib import Path
 import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
+
+from benchmarks.report import bench_meta  # noqa: E402
 
 from repro.core import bitmap as bm  # noqa: E402
 from repro.core import eclat  # noqa: E402
@@ -146,6 +149,7 @@ def run(fast: bool = False, out_path: str = "BENCH_kernels.json"):
         "backend": jax.default_backend(),
         "reps": REPS,
         "fast": fast,
+        "meta": bench_meta(backend=jax.default_backend()),
         "entries": entries,
     }
     Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")

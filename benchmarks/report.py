@@ -16,7 +16,28 @@ RESULTS = REPO / "results" / "dryrun"
 
 #: top-level BENCH keys that are configuration, not results
 _CONFIG_KEYS = {"bench", "backend", "db", "fast", "reps", "block_tx",
-                "n_blocks", "P", "window_blocks", "support"}
+                "n_blocks", "P", "window_blocks", "support", "meta"}
+
+
+def bench_meta(backend: str = "", ts: str | None = None,
+               sha: str | None = None) -> dict:
+    """The shared provenance stamp every ``BENCH_*.json`` write carries.
+
+    One helper so all five suite writers (and ``serve_load.merge_bench``)
+    agree on the shape: ``{"git_sha", "backend", "ts"}``.  The caller
+    passes its backend (and may pin ts/sha for determinism in tests);
+    SHA/timestamp default to the surrounding checkout and current UTC
+    time via :mod:`repro.obs.perfdb` — the same stamp the
+    ``BENCH_HISTORY.jsonl`` rows carry, so a BENCH file and its history
+    row are mutually attributable.
+    """
+    from repro.obs import perfdb
+
+    return {
+        "git_sha": sha if sha is not None else perfdb.git_sha(),
+        "backend": backend,
+        "ts": ts if ts is not None else perfdb.utc_stamp(),
+    }
 
 
 def _is_ratio(key: str) -> bool:

@@ -32,10 +32,13 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shapes_for  # noqa: E402
 from repro.configs.registry import all_archs, get_config  # noqa: E402
+from repro.obs.machine import TPU_V5E  # noqa: E402
 
-PEAK = 197e12
-HBM = 819e9
-LINK = 50e9
+# Machine constants live in repro.obs.machine (shared with the kernel
+# profiler); the module-level names are kept for existing consumers/tests.
+PEAK = TPU_V5E.peak_flops
+HBM = TPU_V5E.hbm_bw
+LINK = TPU_V5E.link_bw
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
 
 WHISPER_DEC = 448

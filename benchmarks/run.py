@@ -26,6 +26,9 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+from pathlib import Path as _Path
+
+sys.path.insert(0, str(_Path(__file__).resolve().parents[1] / "src"))
 
 
 def main() -> None:
@@ -95,6 +98,31 @@ def main() -> None:
 
     print("\n===== summary (BENCH_*.json) =====", flush=True)
     print(bench_summary())
+
+    # persistent perf trajectory: one stamped BENCH_HISTORY.jsonl row per
+    # suite this invocation (re)wrote — the obs_report history/regress input
+    import json
+    from pathlib import Path
+
+    from repro.obs import perfdb  # noqa: E402 (src on sys.path above)
+
+    bench_suites = [s for s in sections
+                    if s in ("kernels", "serve", "stream", "cluster", "io")]
+    for suite in bench_suites:
+        f = Path(__file__).resolve().parents[1] / f"BENCH_{suite}.json"
+        try:
+            payload = json.loads(f.read_text())
+        except (OSError, json.JSONDecodeError):
+            continue
+        meta = payload.get("meta") or {}
+        row = perfdb.append(
+            str(f.parent / perfdb.DEFAULT_PATH), suite,
+            perfdb.bench_result_keys(payload),
+            sha=meta.get("git_sha"), backend=meta.get("backend", ""),
+            ts=meta.get("ts"),
+        )
+        print(f"[history += {suite}: {len(row['keys'])} keys @ "
+              f"{row['sha'] or '?'}]", flush=True)
 
 
 if __name__ == "__main__":

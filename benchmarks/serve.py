@@ -27,6 +27,7 @@ from pathlib import Path
 import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -37,6 +38,8 @@ from repro.data.ibm_gen import IBMParams, generate_dense  # noqa: E402
 from repro.kernels import ops  # noqa: E402
 from repro.serve import QueryEngine  # noqa: E402
 from repro.serve.index import build_indexes  # noqa: E402
+
+from benchmarks.report import bench_meta  # noqa: E402
 
 REPS = 5
 
@@ -162,6 +165,7 @@ def run(fast: bool = False, out_path: str = "BENCH_serve.json"):
         "n_rules": R,
         "reps": REPS,
         "fast": fast,
+        "meta": bench_meta(backend=jax.default_backend()),
         "entries": entries,
     }
     # serve_load merges its slo_* keys into the same file; keep them across

@@ -30,6 +30,7 @@ from pathlib import Path
 import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -40,6 +41,8 @@ from repro.data.ibm_gen import IBMParams, drifting_stream  # noqa: E402
 from repro.kernels import ops  # noqa: E402
 from repro.serve.index import FIIndex  # noqa: E402
 from repro.stream import SlidingWindow  # noqa: E402
+
+from benchmarks.report import bench_meta  # noqa: E402
 
 REPS = 5
 
@@ -151,6 +154,7 @@ def run(fast: bool = False, out_path: str = "BENCH_stream.json"):
         "reps": REPS,
         "fast": fast,
         "delta_speedup_vs_full": speedup,
+        "meta": bench_meta(backend=jax.default_backend()),
         "entries": entries,
     }
     Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")

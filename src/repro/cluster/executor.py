@@ -43,6 +43,8 @@ from repro.cluster import checkpoint as checkpoint_mod
 from repro.cluster import planner as planner_mod
 from repro.cluster import rebalance as rebalance_mod
 from repro.obs import metrics as obs_metrics
+from repro.obs import profile as obs_profile
+from repro.obs import progress as obs_progress
 from repro.obs import trace as obs_trace
 
 AXIS = fimi.AXIS  # the miner mesh axis name ("miners")
@@ -231,6 +233,9 @@ def execute(
     checkpoint_dir: Optional[str] = None,
     resume: bool = False,
     round_hook: Optional[Callable[[int], None]] = None,
+    progress_cb: Optional[
+        Callable[[obs_progress.ProgressSnapshot], None]
+    ] = None,
 ) -> ClusterResult:
     """Run the full distributed pipeline; returns table + plan + telemetry.
 
@@ -242,6 +247,11 @@ def execute(
     chunk width from the plan, and donations from the restored ledger.
     ``round_hook(r)`` is called after round ``r`` is checkpointed; the
     fault harness raises from it to simulate a mid-run death.
+
+    ``progress_cb`` receives a live :class:`ProgressSnapshot` after every
+    round — the drivers print its ``line()`` — fed from the planner's
+    estimated loads and the observed per-round completions (ETA math in
+    :mod:`repro.obs.progress`).
     """
     P, T, IW = tx_shards.shape
     spmd, mesh, backend = _auto_spmd(P, spmd, mesh)
@@ -335,6 +345,14 @@ def execute(
             rounds = list(state.rounds)
             donations = list(state.donations)
 
+    progress = obs_progress.ProgressEstimator(plan.est_loads)
+    progress.start()
+    if r > 0:
+        # resumed mid-run: credit the restored rounds as one bulk update so
+        # frac/straggler pick up where the dead run left off (the warm-up
+        # discount then treats this replay credit like compile time)
+        progress.update(ledger.est_mined, ledger.observed)
+
     while any(queues) and r < params.max_rounds:
         take = [q[:chunk] for q in queues]
         queues = [q[chunk:] for q in queues]
@@ -413,6 +431,24 @@ def execute(
             [sum(max(float(est_sizes[c]), 1.0) for c in ids) for ids in take]
         )
         ledger.record_round(trips, est_mined)
+        snap = progress.update(est_mined, trips)
+        if progress_cb is not None:
+            progress_cb(snap)
+        if obs_profile.PROFILER.enabled:
+            # The multi-support kernel runs once per DFS trip inside the
+            # compiled Phase-4 while_loop; attribute this round's mine wall
+            # time to those executions (shapes from the per-shard slab).
+            obs_profile.PROFILER.observe_loop(
+                "multi",
+                {
+                    "K": max(1, int(params.eclat.frontier_size)),
+                    "I": n_items,
+                    "W": (int(out3.slab.reshape(P, -1, IW).shape[1]) + 31)
+                    // 32,
+                },
+                n_exec=int(trips.sum()),
+                wall_s=mine_s,
+            )
 
         if tr.enabled:
             # Modeled per-shard lanes: shards run the round in lockstep, so
@@ -488,6 +524,7 @@ def execute(
         if round_hook is not None:
             round_hook(r - 1)
     assert not any(queues), "max_rounds exhausted with classes still queued"
+    progress.finish()
 
     if params.strict and (exchange_overflow or mine_overflow):
         raise RuntimeError(

@@ -14,6 +14,7 @@ does between collectives.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -24,6 +25,8 @@ import numpy as np
 from repro.core import bitmap as bm
 from repro.core import eclat, mfi, pbec, phases, sampling, schedule
 from repro.obs import metrics as obs_metrics
+from repro.obs import profile as obs_profile
+from repro.obs import progress as obs_progress
 from repro.obs import trace as obs_trace
 
 _U32 = jnp.uint32
@@ -67,6 +70,7 @@ class FimiResult:
     work_iters: np.ndarray              # int [P] — DFS trips per miner
     fi_dict: Optional[Dict] = None      # materialized {frozenset: supp}
     nodes_popped: Optional[np.ndarray] = None  # int [P] — DFS nodes mined
+    progress: Optional[obs_progress.ProgressSnapshot] = None  # final snapshot
 
 
 # ---------------------------------------------------------------------------
@@ -321,9 +325,13 @@ def run(
         multi_support_fn=params.multi_support_fn,
     )
     keys4 = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(P))
+    slab = out3.slab.reshape(P, -1, IW) if out3.slab.ndim == 2 else out3.slab
+    progress = obs_progress.ProgressEstimator(est_loads)
+    progress.start()
+    mine_t0 = time.perf_counter()
     with tr.span("fimi/phase4_mine", Cmax=Cmax, A=A):
-        out4 = tr.sync(spmd(p4, P, mesh)(
-            out3.slab.reshape(P, -1, IW) if out3.slab.ndim == 2 else out3.slab,
+        out4 = spmd(p4, P, mesh)(
+            slab,
             out3.slab_valid.reshape(P, -1),
             tx_shards,
             local_valid,
@@ -333,7 +341,28 @@ def run(
             jnp.broadcast_to(jnp.asarray(ancestor_masks), (P, A, n_items)),
             jnp.broadcast_to(jnp.asarray(abs_minsup, jnp.int32), (P,)),
             keys4,
-        ))
+        )
+        out4 = jax.block_until_ready(out4)
+    mine_s = time.perf_counter() - mine_t0
+    trips_arr = np.asarray(out4.work_iters).astype(np.float64).reshape(-1)
+    # Loop-attributed kernel work: the multi-support sweep executes inside
+    # the compiled Eclat while_loop once per DFS trip (the ops wrapper only
+    # sees the trace-time dispatch); shapes come from the mined slab.
+    if obs_profile.PROFILER.enabled:
+        obs_profile.PROFILER.observe_loop(
+            "multi",
+            {
+                "K": max(1, int(params.eclat.frontier_size)),
+                "I": n_items,
+                "W": (int(slab.shape[1]) + 31) // 32,
+            },
+            n_exec=int(trips_arr.sum()),
+            wall_s=mine_s,
+        )
+    # One-shot pipeline: the single update closes the progress record with
+    # the trip-grounded straggler scores (Thm 6.1 estimate vs observation).
+    final_progress = progress.update(est_loads, trips_arr)
+    progress.finish()
 
     anc_supports = np.asarray(out4.prefix_supports)[0]  # identical on all p
     anc_frequent = int((anc_supports >= abs_minsup).sum()) if anc_list else 0
@@ -352,6 +381,7 @@ def run(
         n_fis=n_fis,
         work_iters=np.asarray(out4.work_iters),
         nodes_popped=np.asarray(out4.nodes_popped).reshape(-1),
+        progress=final_progress,
     )
     _emit_run_metrics(result, params, P)
     if materialize:

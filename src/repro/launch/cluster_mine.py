@@ -67,6 +67,9 @@ def run_once(dense, n_items, P, args, eclat_mod, fimi_mod, cluster,
         checkpoint_dir=getattr(args, "checkpoint", "") or None,
         resume=getattr(args, "resume", False),
         round_hook=_kill_hook(args),
+        # the live line: sample-estimated completion + barrier-aware ETA +
+        # worst straggler, refreshed at every round boundary
+        progress_cb=lambda s: print("  " + s.line(), flush=True),
     )
     t0 = time.perf_counter()
     if store is not None:

@@ -130,6 +130,9 @@ def main():
           f"exchange_overflow={res.exchange_overflow}")
     print(f"per-miner work (DFS trips): {res.work_iters.tolist()}  "
           f"balance={w.max()/max(w.mean(),1):.2f}")
+    if res.progress is not None:
+        print(res.progress.line() + "  stragglers="
+              + ",".join(f"{s:.2f}" for s in res.progress.stragglers))
     if store is not None:
         print(f"streamed host high-water: {reader.peak_host_bytes} bytes "
               f"(budget {reader.budget_bytes})")

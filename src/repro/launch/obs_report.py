@@ -30,11 +30,31 @@ Subcommands::
       key are also compared under the same threshold.  Exits 1 on any
       regression.
 
-  inject-slowdown SRC_RUN DST_RUN --factor 1.3
+  inject-slowdown SRC_RUN DST_RUN --factor 1.3 [--match SUBSTR]
       Copy a run record with every time-like quantity scaled by ``factor``
-      (wall_s, *_ms/*_s gauges and histograms, trace durations).  The
+      (wall_s, *_ms/*_s gauges and histograms, trace durations); ``--match``
+      narrows the scaling to names containing a substring.  The
       deterministic partner for testing the diff gate: ``diff SRC DST``
       must fail and ``diff SRC SRC`` must pass, with no timing flakiness.
+      (``--match compute_ms`` is the kernels --check-model failing partner.)
+
+  kernels RUN_DIR [--require bitmap,multi,...] [--check-model]
+      Render the kernel profiler's attribution (``--profile`` runs):
+      measured vs modeled time, achieved roofline fraction, and the
+      memory-/compute-bound verdict per family.  ``--require`` exits 1
+      unless every named family has attribution; ``--check-model``
+      recomputes each roofline term from the published flop/byte/machine
+      gauges and exits 1 on mismatch.
+
+  history [--history BENCH_HISTORY.jsonl] [--suite S] [--key SUBSTR]
+      Render per-key trends from the perf ledger (newest last, with the
+      git SHA each row was stamped with).
+
+  regress [--history BENCH_HISTORY.jsonl] [--threshold 0.25] [--window 8]
+      Gate the newest ledger row: exit 1 when any directional key degraded
+      past the threshold vs its trailing median (``repro.obs.perfdb``).
+      ``--degrade F`` synthetically worsens the newest values first — the
+      deterministic proof in tools/check.sh that the gate can fire.
 
 Exit codes: 0 ok, 1 regression detected, 2 usage / unreadable record.
 """
@@ -47,7 +67,7 @@ import os
 import sys
 from typing import Dict, Iterable, List, Optional, Tuple
 
-from repro.obs import runlog
+from repro.obs import perfdb, runlog
 
 #: gauge/summary names treated as durations (the regression-gated set)
 _TIME_SUFFIXES = ("_ms", "_s", "wall_s")
@@ -249,10 +269,16 @@ def cmd_diff(args) -> int:
     old, new = _load(args.old), _load(args.new)
     t_old, t_new = _time_metrics(old), _time_metrics(new)
     shared = sorted(set(t_old) & set(t_new))
+    only_old = sorted(set(t_old) - set(t_new))
+    only_new = sorted(set(t_new) - set(t_old))
     if not shared:
         print("obs_report diff: no shared time-like metrics "
               "(were both runs recorded with --metrics or --trace?)",
               file=sys.stderr)
+        for name in only_old:
+            print(f"  only in {args.old}: {name}", file=sys.stderr)
+        for name in only_new:
+            print(f"  only in {args.new}: {name}", file=sys.stderr)
         return 2
     regressions: List[str] = []
     print(f"diff {args.old} -> {args.new}  (threshold +{args.threshold:.0%})")
@@ -278,6 +304,15 @@ def cmd_diff(args) -> int:
         print("counter deltas (context only):")
         for k, (a, b) in sorted(changed.items()):
             print(f"  {k:<36} {a} -> {b}")
+    # metrics present on one side only: a run that silently stopped (or
+    # started) recording a phase is itself a finding — never hide it
+    if only_old or only_new:
+        print(f"metrics in one run only ({len(only_old) + len(only_new)}, "
+              f"not gated):")
+        for name in only_old:
+            print(f"  {name:<36} {t_old[name]:>12.4f} -> (missing in new)")
+        for name in only_new:
+            print(f"  {name:<36} (missing in old) -> {t_new[name]:>12.4f}")
     if regressions:
         print(f"REGRESSION: {len(regressions)} time-like metric(s) slowed "
               f"beyond +{args.threshold:.0%}: {', '.join(regressions)}")
@@ -378,34 +413,41 @@ def cmd_baseline(args) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _scale_time(obj, factor: float, name: str = ""):
+def _scale_time(obj, factor: float, hit, name: str = ""):
     if isinstance(obj, dict):
         return {
-            k: _scale_time(v, factor, f"{name}/{k}" if name else str(k))
+            k: _scale_time(v, factor, hit, f"{name}/{k}" if name else str(k))
             for k, v in obj.items()
         }
     if isinstance(obj, (int, float)) and not isinstance(obj, bool):
-        return obj * factor if _is_time_like(name) else obj
+        return obj * factor if hit(name) else obj
     return obj
 
 
 def cmd_inject(args) -> int:
     src = _load(args.src)
+    match = args.match or []
+
+    def hit(name: str) -> bool:
+        if not _is_time_like(name):
+            return False
+        return not match or any(m in name for m in match)
+
     os.makedirs(args.dst, exist_ok=True)
-    man = _scale_time(copy.deepcopy(src["manifest"]), args.factor)
+    man = _scale_time(copy.deepcopy(src["manifest"]), args.factor, hit)
     with open(os.path.join(args.dst, runlog.MANIFEST), "w") as f:
         json.dump(man, f, indent=2)
     if src["metrics"] is not None:
         m = copy.deepcopy(src["metrics"])
         m["gauges"] = {
-            k: (v * args.factor if _is_time_like(k) else v)
+            k: (v * args.factor if hit(k) else v)
             for k, v in (m.get("gauges") or {}).items()
         }
         m["histograms"] = {
             k: (
                 {
                     f: (v * args.factor
-                        if _is_time_like(k) and f != "count" else v)
+                        if hit(k) and f != "count" else v)
                     for f, v in summ.items()
                 }
                 if isinstance(summ, dict) else summ
@@ -416,8 +458,9 @@ def cmd_inject(args) -> int:
             json.dump(m, f, indent=2)
     if src["trace"] is not None:
         tr = copy.deepcopy(src["trace"])
+        scale_trace = not match  # named scaling targets metrics only
         for ev in tr.get("traceEvents", []):
-            if "dur" in ev:
+            if scale_trace and "dur" in ev:
                 ev["dur"] = ev["dur"] * args.factor
         with open(os.path.join(args.dst, runlog.TRACE), "w") as f:
             json.dump(tr, f)
@@ -427,7 +470,182 @@ def cmd_inject(args) -> int:
                 open(os.path.join(args.dst, runlog.EVENTS), "w") as fout:
             fout.write(fin.read())
     print(f"wrote {args.dst}: {args.src} with time-like metrics "
-          f"scaled x{args.factor}")
+          + (f"matching {match} " if match else "")
+          + f"scaled x{args.factor}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# kernels (profiler attribution report)
+# ---------------------------------------------------------------------------
+
+_KERNEL_FIELDS = ("measured_ms", "modeled_ms", "compute_ms", "memory_ms",
+                  "flops", "bytes", "achieved_frac", "mem_bound")
+
+
+def _kernel_report(run: dict) -> Tuple[Dict[str, dict], Dict[str, float]]:
+    """(families, machine) parsed back out of the published gauge scheme."""
+    m = run.get("metrics") or {}
+    gauges = m.get("gauges") or {}
+    counters = m.get("counters") or {}
+    machine = {
+        k.rsplit("/", 1)[-1]: float(v)
+        for k, v in gauges.items() if k.startswith("kernels/machine/")
+    }
+    fams: Dict[str, dict] = {}
+    for name, v in gauges.items():
+        parts = name.split("/")
+        if len(parts) == 3 and parts[0] == "kernels" \
+                and parts[1] != "machine" and parts[2] in _KERNEL_FIELDS:
+            fams.setdefault(parts[1], {})[parts[2]] = float(v)
+    for name, v in counters.items():
+        parts = name.split("/")
+        if len(parts) == 3 and parts[0] == "kernels" \
+                and parts[2] in ("calls", "loop_execs"):
+            fams.setdefault(parts[1], {})[parts[2]] = int(v)
+    return fams, machine
+
+
+def cmd_kernels(args) -> int:
+    run = _load(args.run)
+    fams, machine = _kernel_report(run)
+    if not fams:
+        print(f"obs_report kernels: no kernel-profiler gauges in {args.run} "
+              f"(was the run launched with --profile?)", file=sys.stderr)
+        return 2
+    if machine:
+        print("machine model: "
+              + "  ".join(f"{k}={v:.3g}" for k, v in sorted(machine.items())))
+    print(f"{'family':<8} {'calls':>6} {'loop':>8} {'measured':>11} "
+          f"{'modeled':>10} {'achieved':>9}  verdict")
+    for fam in sorted(fams):
+        d = fams[fam]
+        measured = d.get("measured_ms", 0.0)
+        modeled = d.get("modeled_ms", 0.0)
+        ach = d.get("achieved_frac")
+        verdict = ("memory-bound" if d.get("mem_bound", 0.0) > 0.5
+                   else "compute-bound")
+        print(f"{fam:<8} {d.get('calls', 0):>6} {d.get('loop_execs', 0):>8} "
+              f"{measured:>9.3f}ms {modeled:>8.4f}ms "
+              + (f"{ach:>9.2g}" if ach is not None else f"{'—':>9}")
+              + f"  {verdict}")
+
+    failures: List[str] = []
+    if args.require:
+        for fam in [f for f in args.require.split(",") if f]:
+            d = fams.get(fam)
+            if d is None:
+                failures.append(f"{fam}: no attribution recorded")
+            elif d.get("measured_ms", 0.0) <= 0.0 \
+                    or d.get("modeled_ms", 0.0) <= 0.0:
+                failures.append(f"{fam}: present but unattributed "
+                                f"(measured={d.get('measured_ms', 0.0):.4g}ms"
+                                f" modeled={d.get('modeled_ms', 0.0):.4g}ms)")
+    if args.check_model:
+        peak = machine.get("word_ops_peak", 0.0)
+        bw = machine.get("hbm_bw", 0.0)
+        if peak <= 0 or bw <= 0:
+            failures.append("machine constants missing from the record")
+        else:
+            tol = args.tolerance
+            for fam in sorted(fams):
+                d = fams[fam]
+                if d.get("modeled_ms", 0.0) <= 0.0:
+                    continue
+                want_c = d.get("flops", 0.0) / peak * 1e3
+                want_m = d.get("bytes", 0.0) / bw * 1e3
+                got_c, got_m = d.get("compute_ms", 0.0), d.get("memory_ms", 0.0)
+                if abs(got_c - want_c) > tol * max(want_c, 1e-12):
+                    failures.append(
+                        f"{fam}: compute_ms {got_c:.4g} != flops/peak "
+                        f"{want_c:.4g}")
+                if abs(got_m - want_m) > tol * max(want_m, 1e-12):
+                    failures.append(
+                        f"{fam}: memory_ms {got_m:.4g} != bytes/bw "
+                        f"{want_m:.4g}")
+                lo = max(got_c, got_m)
+                hi = got_c + got_m
+                mod = d.get("modeled_ms", 0.0)
+                if not (lo * (1 - tol) <= mod <= hi * (1 + tol)):
+                    failures.append(
+                        f"{fam}: modeled_ms {mod:.4g} outside "
+                        f"[max,sum]=[{lo:.4g},{hi:.4g}] of its terms")
+                if abs(got_m - got_c) > tol * max(got_m, got_c, 1e-12) and \
+                        (d.get("mem_bound", 0.0) > 0.5) != (got_m > got_c):
+                    failures.append(f"{fam}: mem_bound verdict inconsistent "
+                                    f"with its terms")
+    if failures:
+        print("KERNEL ATTRIBUTION FAIL: " + "; ".join(failures))
+        return 1
+    if args.require or args.check_model:
+        print("ok: kernel attribution "
+              + ("complete" if args.require else "")
+              + (" and " if args.require and args.check_model else "")
+              + ("model-consistent" if args.check_model else ""))
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# history / regress (the perf ledger)
+# ---------------------------------------------------------------------------
+
+
+def _load_history(path: str) -> Tuple[List[dict], int]:
+    try:
+        rows, corrupt = perfdb.load(path)
+    except OSError as e:
+        print(f"obs_report: cannot read perf history {path}: {e}",
+              file=sys.stderr)
+        sys.exit(2)
+    if not rows:
+        print(f"obs_report: no usable rows in {path}", file=sys.stderr)
+        sys.exit(2)
+    if corrupt:
+        print(f"note: skipped {corrupt} corrupt line(s) in {path}")
+    return rows, corrupt
+
+
+def cmd_history(args) -> int:
+    rows, _ = _load_history(args.history)
+    series = perfdb.trends(
+        rows, suite=args.suite or None, key_match=args.key or None
+    )
+    if not series:
+        print("obs_report history: no matching keys", file=sys.stderr)
+        return 2
+    print(f"{args.history}: {len(rows)} rows, {len(series)} series")
+    for (suite, key), pts in sorted(series.items()):
+        d = perfdb.direction(key)
+        tail = pts[-args.last:]
+        vals = "  ".join(f"{p['value']:.4g}" for p in tail)
+        lo = min(p["value"] for p in pts)
+        hi = max(p["value"] for p in pts)
+        print(f"  {suite}/{key} [{d or 'untracked'}] "
+              f"min={lo:.4g} max={hi:.4g}")
+        print(f"    {vals}   (newest last, "
+              f"sha {tail[-1]['sha'] or '?'} @ {tail[-1]['ts']})")
+    return 0
+
+
+def cmd_regress(args) -> int:
+    rows, _ = _load_history(args.history)
+    found, checked = perfdb.check_regressions(
+        rows,
+        threshold=args.threshold,
+        window=args.window,
+        min_history=args.min_history,
+        degrade=args.degrade,
+    )
+    label = f" (values degraded x{args.degrade} first)" \
+        if args.degrade != 1.0 else ""
+    print(f"{args.history}: {len(rows)} rows, {checked} gated key(s), "
+          f"threshold +{args.threshold:.0%}{label}")
+    if found:
+        for reg in found:
+            print(f"  REGRESSION {reg.line()}")
+        print(f"REGRESSION: {len(found)} key(s) degraded vs trailing median")
+        return 1
+    print("ok: no key degraded past the threshold")
     return 0
 
 
@@ -483,7 +701,50 @@ def main(argv: Optional[Iterable[str]] = None) -> int:
     i.add_argument("src")
     i.add_argument("dst")
     i.add_argument("--factor", type=float, default=1.3)
+    i.add_argument("--match", action="append", default=[],
+                   help="only scale time-like metrics containing this "
+                        "substring (repeatable; trace durations untouched "
+                        "when given)")
     i.set_defaults(fn=cmd_inject)
+
+    k = sub.add_parser("kernels",
+                       help="render kernel-profiler attribution; gate on "
+                            "coverage/model consistency")
+    k.add_argument("run")
+    k.add_argument("--require", default="",
+                   help="comma-separated families that must carry "
+                        "attribution (exit 1 otherwise), e.g. "
+                        "bitmap,multi,pair,subset,delta")
+    k.add_argument("--check-model", action="store_true", dest="check_model",
+                   help="recompute roofline terms from the flop/byte/machine "
+                        "gauges; exit 1 on mismatch")
+    k.add_argument("--tolerance", type=float, default=0.01,
+                   help="relative tolerance of --check-model (default 1%%)")
+    k.set_defaults(fn=cmd_kernels)
+
+    h = sub.add_parser("history", help="render perf-ledger trends")
+    h.add_argument("--history", default=perfdb.DEFAULT_PATH)
+    h.add_argument("--suite", default="", help="only this suite")
+    h.add_argument("--key", default="", help="only keys containing this")
+    h.add_argument("--last", type=int, default=12,
+                   help="values shown per series (newest last)")
+    h.set_defaults(fn=cmd_history)
+
+    r = sub.add_parser("regress",
+                       help="gate the newest perf-ledger row vs trailing "
+                            "median; exit 1 on degradation")
+    r.add_argument("--history", default=perfdb.DEFAULT_PATH)
+    r.add_argument("--threshold", type=float, default=0.25,
+                   help="allowed relative degradation (0.25 = 25%%)")
+    r.add_argument("--window", type=int, default=8,
+                   help="trailing values the median is taken over")
+    r.add_argument("--min-history", type=int, default=2,
+                   dest="min_history",
+                   help="prior values a key needs before it gates")
+    r.add_argument("--degrade", type=float, default=1.0,
+                   help="synthetically worsen newest values by this factor "
+                        "(failing-partner self-test)")
+    r.set_defaults(fn=cmd_regress)
 
     args = ap.parse_args(list(argv) if argv is not None else None)
     return args.fn(args)

@@ -259,7 +259,15 @@ def compare_dispatch(engine, workload, n: int = 256) -> dict:
 
 
 def merge_bench(path: str, keys: dict) -> None:
-    """Fold ``slo_*`` keys into the (possibly existing) serve BENCH file."""
+    """Fold ``slo_*`` keys into the (possibly existing) serve BENCH file.
+
+    The suite's provenance ``meta`` block (git SHA / backend / ts stamped
+    by ``benchmarks.report.bench_meta``) is preserved when present and
+    stamped fresh when the load harness writes the file first — either
+    way the merged file stays attributable.
+    """
+    from repro.obs import perfdb
+
     data = {"bench": "serve"}
     if os.path.exists(path):
         try:
@@ -268,6 +276,9 @@ def merge_bench(path: str, keys: dict) -> None:
         except (OSError, json.JSONDecodeError):
             pass
     data.update(keys)
+    if not isinstance(data.get("meta"), dict):
+        data["meta"] = {"git_sha": perfdb.git_sha(), "backend": "",
+                        "ts": perfdb.utc_stamp()}
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(data, f, indent=2)
@@ -484,6 +495,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         "slo_p99_ms": p99,
         "slo_p99_objective_ms": policy.p99_ms,
         "slo_shed_rate": final.shed_rate,
+        "slo_shed_total": float(st["shed"]),
         "slo_burn_rate": final.burn_rate,
         "slo_alerts_fired": len(measure_alerts),
         "slo_gate_ok": not violated,
@@ -493,6 +505,17 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.bench_out:
         merge_bench(args.bench_out, slo_keys)
         print(f"[merged {len(slo_keys)} slo_* keys into {args.bench_out}]")
+    if args.gate:
+        # gated launches feed the persistent perf trajectory too, so SLO
+        # latencies/burn trend across PRs (obs_report history/regress)
+        import jax
+
+        from repro.obs import perfdb
+
+        row = perfdb.append(perfdb.DEFAULT_PATH, "serve_load", slo_keys,
+                            backend=jax.default_backend())
+        print(f"[history += serve_load: {len(row['keys'])} keys @ "
+              f"{row['sha'] or '?'}]")
     if obs:
         obs.event("load_done", offered=len(tickets), shed=st["shed"],
                   alerts=len(measure_alerts))

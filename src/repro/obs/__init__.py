@@ -14,8 +14,17 @@ jax-free report CLI.  See DESIGN.md, "Observability".
     driver glue (crash-safe: atexit/SIGTERM partial flush);
   * :mod:`repro.obs.slo`     — sliding-window histograms/counters and the
     SLO policy engine (windowed p50/p95/p99/QPS/shed-rate, error-budget
-    burn-rate alerts with hysteresis) behind the serving front end.
+    burn-rate alerts with hysteresis) behind the serving front end;
+  * :mod:`repro.obs.machine` — the shared roofline machine constants
+    (factored out of ``benchmarks/roofline.py``);
+  * :mod:`repro.obs.profile` — the kernel profiler: per-dispatch-family
+    measured-vs-modeled time attribution and bound-ness verdicts;
+  * :mod:`repro.obs.progress` — the sample-grounded live progress/ETA
+    estimator fed by planner loads and observed DFS trips;
+  * :mod:`repro.obs.perfdb`  — the persistent perf trajectory
+    (``BENCH_HISTORY.jsonl`` append / trend / regression check).
 """
+from repro.obs.machine import MachineModel, machine_for_backend  # noqa: F401
 from repro.obs.metrics import (  # noqa: F401
     Counter,
     Gauge,
@@ -24,6 +33,9 @@ from repro.obs.metrics import (  # noqa: F401
     registry,
     snapshot,
 )
+from repro.obs.profile import KernelProfiler, cost_model, profiler  # noqa: F401
+from repro.obs.perfdb import check_regressions, trends  # noqa: F401
+from repro.obs.progress import ProgressEstimator, ProgressSnapshot  # noqa: F401
 from repro.obs.runlog import RunLog, load_run  # noqa: F401
 from repro.obs.slo import (  # noqa: F401
     SLOPolicy,

@@ -1,0 +1,76 @@
+"""Machine models: the hardware constants every roofline consumer shares.
+
+One frozen :class:`MachineModel` per target — peak arithmetic throughput,
+HBM/DRAM bandwidth, interconnect link bandwidth — factored out of
+``benchmarks/roofline.py`` so the LLM roofline tables and the mining-kernel
+profiler (:mod:`repro.obs.profile`) price work against the SAME constants
+instead of each hard-coding its own copy.  Stdlib-only and jax-free (the
+layering rule of :mod:`repro.obs`): the report CLI recomputes roofline terms
+from these numbers in contexts where jax never loads.
+
+Two units of "flops" coexist deliberately:
+
+  * the LLM roofline prices bf16 MXU FLOPs (``peak_flops`` of ``TPU_V5E``
+    is the 197 TFLOP/s bf16 figure from the brief);
+  * the mining kernels are integer word machines — one "op" is one 32-bit
+    word operation (AND / popcount / add).  ``word_ops_peak`` is the
+    sustained word-op throughput the kernels can reach on that target
+    (VPU lanes on TPU, vectorized scalar units on CPU).
+
+The **machine balance** ``word_ops_peak / hbm_bw`` (ops per byte) is what
+classifies a kernel family as compute- or memory-bound: a family whose
+arithmetic intensity (modeled word-ops per modeled byte) falls below the
+balance is bandwidth-limited — exactly the single-prefix vs batched-frontier
+distinction PR 1 exploited (DESIGN.md, "Performance attribution").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineModel:
+    """Roofline constants of one execution target."""
+
+    name: str
+    peak_flops: float       # bf16 FLOP/s (dense-matmul peak; LLM roofline)
+    hbm_bw: float           # bytes/s main-memory bandwidth
+    link_bw: float          # bytes/s per interconnect link
+    word_ops_peak: float    # 32-bit word ops/s (mining-kernel peak)
+
+    @property
+    def balance_word_ops_per_byte(self) -> float:
+        """Machine balance for the word-op kernels: ops/byte at the ridge."""
+        return self.word_ops_peak / self.hbm_bw
+
+
+#: TPU v5e, from the brief: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s ICI.
+#: Word-op peak: 8 VPU lanes × 128 sublanes × ~3 ops/cycle @ ~0.9 GHz is
+#: O(1e12); we use a conservative 1e12 sustained.
+TPU_V5E = MachineModel(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    link_bw=50e9,
+    word_ops_peak=1e12,
+)
+
+#: A container-class x86 host (the CI target): XLA:CPU multithreaded.
+#: ~50 G sustained 32-bit vector word-ops/s and ~20 GB/s effective stream
+#: bandwidth are deliberately round numbers — the profiler's verdicts
+#: compare *terms against each other*, so only their ratio (the balance,
+#: 2.5 ops/byte) needs to be in the right regime.
+CPU_HOST = MachineModel(
+    name="cpu-host",
+    peak_flops=2e11,
+    hbm_bw=20e9,
+    link_bw=10e9,
+    word_ops_peak=5e10,
+)
+
+
+def machine_for_backend(backend: str | None) -> MachineModel:
+    """The model to price kernels against on a given jax backend name."""
+    if backend and backend.lower() in ("tpu",):
+        return TPU_V5E
+    return CPU_HOST

@@ -26,6 +26,7 @@ import threading
 from typing import Optional
 
 from repro.obs import metrics as obs_metrics
+from repro.obs import profile as obs_profile
 from repro.obs import trace as obs_trace
 from repro.obs.runlog import RunLog
 
@@ -43,6 +44,11 @@ def add_obs_flags(ap: argparse.ArgumentParser) -> None:
                    dest="jax_profile",
                    help="also capture a jax.profiler device trace to DIR "
                         "(TensorBoard/XProf)")
+    g.add_argument("--profile", action="store_true",
+                   help="enable the kernel profiler: per-family measured-vs-"
+                        "modeled attribution published into the run record "
+                        "(render with obs_report kernels; needs --trace or "
+                        "--metrics)")
 
 
 class ObsSession:
@@ -57,13 +63,19 @@ class ObsSession:
     """
 
     def __init__(self, run_dir: str, name: str, config: dict,
-                 trace_on: bool, jax_profile: str = ""):
+                 trace_on: bool, jax_profile: str = "",
+                 profile_on: bool = False):
         # a fresh registry state so the record contains exactly this run
         obs_metrics.reset()
         self.tracer = obs_trace.tracer()
         if trace_on:
             self.tracer.clear()
             self.tracer.enable()
+        self.profiler = obs_profile.profiler()
+        self._profile_on = profile_on
+        if profile_on:
+            self.profiler.clear()
+            self.profiler.enable()
         self.log = RunLog(run_dir, name, config)
         self._profiler = (
             obs_trace.jax_profiler(jax_profile) if jax_profile else None
@@ -90,9 +102,15 @@ class ObsSession:
         self.log.event(kind, **fields)
 
     # -- crash path -----------------------------------------------------------
+    def _publish_profile(self) -> None:
+        if self._profile_on:
+            self.profiler.publish(obs_metrics.registry())
+            self._profile_on = False          # publish is cumulative: once
+
     def _flush_partial(self, reason: str) -> None:
         if self._finished:
             return
+        self._publish_profile()
         self.log.flush_partial(
             metrics_snapshot=obs_metrics.snapshot(),
             tracer=self.tracer,
@@ -127,6 +145,9 @@ class ObsSession:
         if self._profiler is not None:
             self._profiler.__exit__(None, None, None)
             self._profiler = None
+        self._publish_profile()
+        if self.profiler.enabled:
+            self.profiler.disable()
         self.log.finish(
             metrics_snapshot=obs_metrics.snapshot(),
             tracer=self.tracer,
@@ -154,4 +175,5 @@ def start_session(args, name: str,
         config if config is not None else dict(vars(args)),
         trace_on=bool(getattr(args, "trace", "")),
         jax_profile=getattr(args, "jax_profile", ""),
+        profile_on=bool(getattr(args, "profile", False)),
     )

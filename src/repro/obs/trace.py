@@ -12,7 +12,10 @@ render as a per-thread timeline.  Three event flavors:
   * ``add_span(...)`` — a raw event on a *virtual* track (e.g. the
     executor's modeled per-shard mining lanes, one track per shard);
   * ``instant(name, **args)`` — a zero-duration marker ("ph": "i") for
-    point events like drift triggers.
+    point events like drift triggers;
+  * ``counter(name, **values)`` — a counter-track sample ("ph": "C") for
+    live gauges (mining progress %, serve queue depth, host-bytes
+    high-water) rendered as area/line tracks alongside the spans.
 
 Device timing: JAX dispatch is asynchronous, so a host span around a
 dispatch measures enqueue, not execution.  ``sync(value, name)`` closes the
@@ -146,6 +149,28 @@ class Tracer:
         if tid not in self._track_names:
             self._track_names[tid] = track
         self._record(name, t0, dur_s, args, tid=tid, cat=cat)
+
+    def counter(self, name: str, **values) -> None:
+        """A Chrome counter sample ("ph": "C") — renders as a counter track.
+
+        Each call appends one sample of the named counter series; Perfetto
+        draws the series as a stacked area/line track (one lane per key in
+        ``values``).  Used for the live gauges worth seeing against the
+        span timeline: mining progress %, serve queue depth, host-bytes
+        high-water.  Values must be numeric."""
+        if not self._enabled:
+            return
+        ev = {
+            "ph": "C",
+            "name": name,
+            "cat": "counter",
+            "pid": 0,
+            "tid": self._tid(),
+            "ts": (time.monotonic() - self._t_base) * 1e6,
+            "args": {k: float(v) for k, v in values.items()},
+        }
+        with self._lock:
+            self._events.append(ev)
 
     def instant(self, name: str, **args) -> None:
         """A zero-duration marker event (drift fired, checkpoint saved…)."""

@@ -212,6 +212,7 @@ class MiningService:
                 return req.ticket
             self._q.append(req)
             self._reg.gauge("service/queue_depth").update_max(len(self._q))
+            self._tracer.counter("queue depth", depth=len(self._q))
             self._cond.notify()
         return req.ticket
 
@@ -271,6 +272,7 @@ class MiningService:
                         self._cond.wait(remain)
                 n = min(len(self._q), self.max_batch)
                 batch = [self._q.popleft() for _ in range(n)]
+                self._tracer.counter("queue depth", depth=len(self._q))
             self._flush(batch)
 
     def _flush(self, batch: List[_Request]) -> None:

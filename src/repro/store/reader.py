@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.store.retry import RetriesExhausted, RetryPolicy
 from repro.store.store import StoreIntegrityError, TxStore
 
@@ -114,6 +115,9 @@ class BlockReader:
             obs_metrics.registry().gauge("store/host_bytes_peak").update_max(
                 float(self.peak_host_bytes)
             )
+            obs_trace.TRACER.counter(
+                "host bytes", live=float(live),
+                peak=float(self.peak_host_bytes))
             if live > self.budget_bytes:
                 raise HostBudgetExceeded(
                     f"host residency {live}B exceeds budget "
@@ -124,6 +128,9 @@ class BlockReader:
     def _release(self, i: int) -> None:
         with self._lock:
             self._live.pop(i, None)
+            obs_trace.TRACER.counter(
+                "host bytes", live=float(sum(self._live.values())),
+                peak=float(self.peak_host_bytes))
 
     # -- the double-buffered stream -------------------------------------------
     def device_blocks(

@@ -169,7 +169,7 @@ def _assert_chrome_trace(obj):
     and chrome://tracing require to render)."""
     assert isinstance(obj, dict) and isinstance(obj["traceEvents"], list)
     for ev in obj["traceEvents"]:
-        assert ev["ph"] in ("X", "i", "M")
+        assert ev["ph"] in ("X", "i", "M", "C")
         assert isinstance(ev["name"], str)
         assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
         if ev["ph"] == "X":
@@ -178,6 +178,10 @@ def _assert_chrome_trace(obj):
         if ev["ph"] == "M":
             assert ev["name"] == "thread_name"
             assert isinstance(ev["args"]["name"], str)
+        if ev["ph"] == "C":
+            # counter samples: every lane value must be numeric
+            assert ev["args"] and all(
+                isinstance(v, (int, float)) for v in ev["args"].values())
 
 
 def test_tracer_disabled_is_inert():

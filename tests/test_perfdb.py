@@ -1,0 +1,204 @@
+"""Persistent perf trajectory: JSONL append/load round-trip, corrupt-line
+tolerance, direction rules, trend extraction, trailing-median regression
+detection, the BENCH key folding, and the obs_report history/regress CLI
+exit-code contract (0 ok / 1 regression / 2 unusable input)."""
+import json
+
+import pytest
+
+from repro.launch import obs_report
+from repro.obs import perfdb
+
+
+def _seed(path, values, key="wall_ms", suite="kernels", **extra_keys):
+    for v in values:
+        keys = {key: v}
+        keys.update(extra_keys)
+        perfdb.append(str(path), suite, keys, sha="f00ba4", ts="2026-08-08")
+
+
+# ---------------------------------------------------------------------------
+# Append / load
+# ---------------------------------------------------------------------------
+
+
+def test_append_load_roundtrip(tmp_path):
+    p = tmp_path / "hist.jsonl"
+    row = perfdb.append(str(p), "io", {"mine_slowdown_streamed": 1.1,
+                                       "parity": True, "note": "x"},
+                        sha="abc", backend="cpu", ts="T")
+    assert row["keys"] == {"mine_slowdown_streamed": 1.1}  # bools/strs dropped
+    perfdb.append(str(p), "io", {"mine_slowdown_streamed": 1.2},
+                  sha="abc", ts="T")
+    rows, corrupt = perfdb.load(str(p))
+    assert corrupt == 0 and len(rows) == 2
+    assert rows[0]["suite"] == "io" and rows[0]["sha"] == "abc"
+    # one whole JSON object per line — the atomicity the O_APPEND write buys
+    lines = p.read_text().splitlines()
+    assert len(lines) == 2 and all(json.loads(ln) for ln in lines)
+
+
+def test_load_skips_corrupt_and_malformed_lines(tmp_path):
+    p = tmp_path / "hist.jsonl"
+    _seed(p, [1.0, 2.0])
+    with open(p, "a") as f:
+        f.write('{"torn...\n')                    # torn write
+        f.write('[1, 2]\n')                       # not an object
+        f.write('{"suite": "x"}\n')               # no keys dict
+        f.write("\n")                             # blank: not corrupt
+    rows, corrupt = perfdb.load(str(p))
+    assert len(rows) == 2 and corrupt == 3
+
+
+def test_default_stamps(tmp_path):
+    p = tmp_path / "hist.jsonl"
+    row = perfdb.append(str(p), "s", {"x_ms": 1.0})
+    assert len(row["ts"]) == 20 and row["ts"].endswith("Z")
+    assert isinstance(row["sha"], str)            # '' outside git is fine
+
+
+# ---------------------------------------------------------------------------
+# Direction rules + trends
+# ---------------------------------------------------------------------------
+
+
+def test_direction_rules():
+    assert perfdb.direction("mine_wall_ms") == "lower"
+    assert perfdb.direction("slo_p99_ms") == "lower"
+    assert perfdb.direction("obs_overhead_streamed") == "lower"
+    assert perfdb.direction("slo_burn_rate") == "lower"
+    assert perfdb.direction("delta_speedup_vs_full") == "higher"
+    assert perfdb.direction("rebalance_improvement") == "higher"
+    assert perfdb.direction("slo_qps") == "higher"
+    assert perfdb.direction("n_fis") is None      # counts are not gated
+
+
+def test_trends_filtering(tmp_path):
+    p = tmp_path / "hist.jsonl"
+    _seed(p, [1.0, 2.0], key="a_ms", suite="kernels")
+    _seed(p, [3.0], key="a_ms", suite="serve")
+    rows, _ = perfdb.load(str(p))
+    t = perfdb.trends(rows)
+    assert [pt["value"] for pt in t[("kernels", "a_ms")]] == [1.0, 2.0]
+    assert ("serve", "a_ms") in t
+    only = perfdb.trends(rows, suite="serve")
+    assert list(only) == [("serve", "a_ms")]
+    assert perfdb.trends(rows, key_match="zzz") == {}
+
+
+# ---------------------------------------------------------------------------
+# Regression detection
+# ---------------------------------------------------------------------------
+
+
+def test_no_regression_on_stable_series(tmp_path):
+    p = tmp_path / "h.jsonl"
+    _seed(p, [100.0, 104.0, 98.0, 101.0])
+    rows, _ = perfdb.load(str(p))
+    found, checked = perfdb.check_regressions(rows)
+    assert found == [] and checked == 1
+
+
+def test_lower_better_regression_detected(tmp_path):
+    p = tmp_path / "h.jsonl"
+    _seed(p, [100.0, 104.0, 98.0, 140.0])       # +39% vs median 101
+    rows, _ = perfdb.load(str(p))
+    found, _ = perfdb.check_regressions(rows, threshold=0.25)
+    assert len(found) == 1
+    reg = found[0]
+    assert reg.key == "wall_ms" and reg.direction == "lower"
+    assert reg.ratio > 1.25 and "worse" in reg.line()
+
+
+def test_higher_better_regression_detected(tmp_path):
+    p = tmp_path / "h.jsonl"
+    _seed(p, [10.0, 10.4, 9.8, 6.0], key="x_speedup")
+    rows, _ = perfdb.load(str(p))
+    found, _ = perfdb.check_regressions(rows, threshold=0.25)
+    assert len(found) == 1 and found[0].direction == "higher"
+
+
+def test_min_history_gates_new_keys(tmp_path):
+    p = tmp_path / "h.jsonl"
+    _seed(p, [100.0, 900.0])                    # huge jump but only 1 prior
+    rows, _ = perfdb.load(str(p))
+    found, checked = perfdb.check_regressions(rows, min_history=2)
+    assert found == [] and checked == 0
+    found, checked = perfdb.check_regressions(rows, min_history=1)
+    assert len(found) == 1 and checked == 1
+
+
+def test_window_limits_trailing_median(tmp_path):
+    p = tmp_path / "h.jsonl"
+    # ancient fast values must age out of a window of 2
+    _seed(p, [10.0, 10.0, 100.0, 104.0, 102.0])
+    rows, _ = perfdb.load(str(p))
+    found, _ = perfdb.check_regressions(rows, threshold=0.25, window=2)
+    assert found == []
+
+
+def test_degrade_is_a_deterministic_failing_partner(tmp_path):
+    p = tmp_path / "h.jsonl"
+    _seed(p, [100.0, 100.0, 100.0])
+    _seed(p, [50.0, 50.0, 50.0], key="y_qps")
+    rows, _ = perfdb.load(str(p))
+    assert perfdb.check_regressions(rows)[0] == []
+    found, _ = perfdb.check_regressions(rows, degrade=2.0)
+    assert {r.key for r in found} == {"wall_ms", "y_qps"}
+
+
+def test_bench_result_keys_folds_entries():
+    bench = {"bench": "kernels", "backend": "cpu", "fast": True,
+             "meta": {"git_sha": "x"}, "reps": 5,
+             "some_speedup": 3.0,
+             "entries": [{"name": "pair_supports", "us": 12.5},
+                         {"name": "noname"}]}
+    keys = perfdb.bench_result_keys(bench)
+    assert keys == {"some_speedup": 3.0, "pair_supports_us": 12.5}
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes: 0 ok / 1 regression / 2 unusable
+# ---------------------------------------------------------------------------
+
+
+def test_cli_history_and_regress_ok(tmp_path, capsys):
+    p = tmp_path / "h.jsonl"
+    _seed(p, [100.0, 104.0, 98.0])
+    assert obs_report.main(["history", "--history", str(p)]) == 0
+    assert "kernels/wall_ms" in capsys.readouterr().out
+    assert obs_report.main(["regress", "--history", str(p)]) == 0
+
+
+def test_cli_regress_exit_1_on_regression(tmp_path, capsys):
+    p = tmp_path / "h.jsonl"
+    _seed(p, [100.0, 104.0, 98.0, 200.0])
+    assert obs_report.main(["regress", "--history", str(p)]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_cli_regress_degrade_partner(tmp_path):
+    p = tmp_path / "h.jsonl"
+    _seed(p, [100.0, 104.0, 98.0])
+    assert obs_report.main(["regress", "--history", str(p),
+                            "--degrade", "2.0"]) == 1
+
+
+def test_cli_exit_2_on_missing_or_empty_history(tmp_path):
+    with pytest.raises(SystemExit) as e:
+        obs_report.main(["regress", "--history", str(tmp_path / "nope")])
+    assert e.value.code == 2
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("not json at all\n")
+    with pytest.raises(SystemExit) as e:
+        obs_report.main(["history", "--history", str(empty)])
+    assert e.value.code == 2
+
+
+def test_cli_regress_skips_corrupt_lines(tmp_path, capsys):
+    p = tmp_path / "h.jsonl"
+    _seed(p, [100.0, 104.0, 98.0])
+    with open(p, "a") as f:
+        f.write('{"torn\n')
+    assert obs_report.main(["regress", "--history", str(p)]) == 0
+    assert "skipped 1 corrupt line" in capsys.readouterr().out

@@ -1,0 +1,226 @@
+"""Sample-grounded live progress/ETA: fake-clock convergence against an
+offline oracle (midpoint ETA within tolerance), barrier-aware max-shard
+math, warm-up discount, straggler scores, gauge/counter-track export, and
+the wired-through ``fimi.run`` result."""
+import numpy as np
+import pytest
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.progress import ProgressEstimator, ProgressSnapshot
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    obs_metrics.reset()
+    obs_trace.TRACER.disable()
+    obs_trace.TRACER.clear()
+    yield
+    obs_metrics.reset()
+    obs_trace.TRACER.disable()
+    obs_trace.TRACER.clear()
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+
+def _simulate(est, true_rates, dt=1.0, compile_s=0.0, rounds=None):
+    """Offline oracle: shards mine at constant true rates, barrier rounds
+    every ``dt`` seconds; returns (estimator, wall time actually taken,
+    per-update (snapshot, clock time) history)."""
+    clock = FakeClock()
+    prog = ProgressEstimator(est, clock=clock, publish=False)
+    prog.start()
+    if compile_s:
+        clock.t += compile_s   # jit compile swallowed by the first interval
+    done = [0.0] * len(est)
+    t_start = clock.t
+    hist = []
+    r = 0
+    while any(d < e for d, e in zip(done, est)):
+        clock.t += dt
+        delta = []
+        for p, rate in enumerate(true_rates):
+            d = min(rate * dt, est[p] - done[p])
+            done[p] += d
+            delta.append(d)
+        hist.append((prog.update(delta), clock.t))
+        r += 1
+        if rounds is not None and r >= rounds:
+            break
+    return prog, clock.t - t_start, hist, clock
+
+
+# ---------------------------------------------------------------------------
+# ETA convergence vs the oracle
+# ---------------------------------------------------------------------------
+
+
+def test_eta_exact_for_uniform_rates():
+    """Constant rates, perfect estimates: ETA is exact after round 2."""
+    est = [100.0, 100.0]
+    prog, wall, hist, clock = _simulate(est, [10.0, 10.0], dt=1.0)
+    for snap, t in hist[1:-1]:
+        actual_remaining = (hist[-1][1]) - t
+        assert snap.eta_s == pytest.approx(actual_remaining, rel=1e-6)
+    assert hist[-1][0].frac == pytest.approx(1.0)
+
+
+def test_eta_midpoint_within_tolerance_vs_oracle():
+    """Skewed shards + compile warm-up: midpoint ETA within 25 %."""
+    est = [120.0, 80.0, 100.0]
+    prog, wall, hist, clock = _simulate(
+        est, [9.0, 11.0, 10.0], dt=1.0, compile_s=3.0)
+    mid = next(s for s, _ in hist if s.frac >= 0.5)
+    t_mid = next(t for s, t in hist if s is mid)
+    actual_remaining = hist[-1][1] - t_mid
+    assert mid.eta_s == pytest.approx(actual_remaining, rel=0.25)
+    err = prog.finish()
+    assert err is not None and err < 0.25
+
+
+def test_warmup_discount_drops_compile_time():
+    """A long first interval (jit compile) must not inflate later ETAs:
+    round-2+ rates use the post-first-update window only."""
+    est = [100.0]
+    # 10s of "compile" inside the first interval, then 10 units/s
+    prog, wall, hist, clock = _simulate(
+        est, [10.0], dt=1.0, compile_s=10.0)
+    # without the discount the round-2 rate would be 20/12 ≈ 1.7 u/s and
+    # ETA ≈ 48s; with it the rate is the true 10 u/s
+    snap2 = hist[1][0]
+    assert snap2.eta_s == pytest.approx(8.0, rel=1e-6)
+
+
+def test_barrier_eta_is_max_over_shards():
+    """ETA tracks the slowest shard's projected finish, not the mean."""
+    clock = FakeClock()
+    prog = ProgressEstimator([100.0, 100.0], clock=clock, publish=False)
+    prog.start()
+    clock.t += 1.0
+    prog.update([20.0, 5.0])
+    clock.t += 1.0
+    snap = prog.update([20.0, 5.0])
+    # fast shard: 60 left at 20/s → 3s; slow shard: 90 left at 5/s → 18s
+    assert snap.eta_s == pytest.approx(18.0, rel=1e-6)
+    # fleet-mean math would have said (150 left) / (25/s) = 6s — the
+    # barrier-aware number is the honest one
+    assert snap.eta_s > 150.0 / 25.0
+
+
+# ---------------------------------------------------------------------------
+# Straggler scores
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_score_from_trips():
+    """Trip telemetry: cost per estimated unit, normalized to fleet mean."""
+    clock = FakeClock()
+    prog = ProgressEstimator([100.0, 100.0], clock=clock, publish=False)
+    prog.start()
+    clock.t += 1.0
+    # shard 1 needed 3x the trips for the same estimated work
+    snap = prog.update([50.0, 50.0], trips_delta=[100.0, 300.0])
+    assert snap.stragglers[1] == pytest.approx(3.0 * snap.stragglers[0])
+    assert sum(snap.stragglers) / 2 == pytest.approx(1.0)
+
+
+def test_straggler_score_from_rates_fallback():
+    clock = FakeClock()
+    prog = ProgressEstimator([100.0, 100.0], clock=clock, publish=False)
+    prog.start()
+    clock.t += 1.0
+    prog.update([40.0, 10.0])
+    clock.t += 1.0
+    snap = prog.update([40.0, 10.0])
+    assert snap.stragglers[1] > snap.stragglers[0]
+
+
+# ---------------------------------------------------------------------------
+# Export: gauges, counter track, live line
+# ---------------------------------------------------------------------------
+
+
+def test_update_publishes_gauges_and_counter_track():
+    obs_trace.TRACER.enable()
+    clock = FakeClock()
+    prog = ProgressEstimator([10.0, 10.0], clock=clock)
+    prog.start()
+    clock.t += 1.0
+    prog.update([5.0, 5.0])
+    clock.t += 1.0
+    prog.update([5.0, 5.0])
+    g = obs_metrics.snapshot()["gauges"]
+    assert g["progress/frac"] == pytest.approx(1.0)
+    assert g["progress/round"] == 2.0
+    assert "progress/eta_s" in g
+    assert "progress/shard0/straggler" in g
+    events = obs_trace.TRACER.export()["traceEvents"]
+    counters = [e for e in events if e.get("ph") == "C"
+                and e.get("name") == "mining progress"]
+    assert counters and {"percent", "eta_s"} <= set(counters[-1]["args"])
+
+
+def test_finish_publishes_midpoint_error_gauge():
+    est = [100.0, 100.0]
+    clock = FakeClock()
+    prog = ProgressEstimator(est, clock=clock)  # publish=True
+    prog.start()
+    for _ in range(10):
+        clock.t += 1.0
+        prog.update([10.0, 10.0])
+    err = prog.finish()
+    assert err is not None and err == pytest.approx(0.0, abs=1e-9)
+    assert obs_metrics.snapshot()["gauges"][
+        "progress/eta_rel_err_mid"] == pytest.approx(err)
+
+
+def test_single_round_run_has_no_midpoint_error():
+    clock = FakeClock()
+    prog = ProgressEstimator([10.0], clock=clock, publish=False)
+    prog.start()
+    clock.t += 1.0
+    prog.update([10.0])
+    assert prog.finish() is None
+
+
+def test_line_format():
+    snap = ProgressSnapshot(frac=0.5, elapsed_s=2.0, eta_s=3.0, rate=5.0,
+                            round=2, stragglers=[1.0, 1.3])
+    line = snap.line()
+    assert "progress  50.0%" in line
+    assert "worst-straggler 1.30x" in line
+    # no-rate-yet variant renders a placeholder, not a crash
+    assert "?" in ProgressSnapshot(
+        frac=0.0, elapsed_s=0.0, eta_s=None, rate=0.0, round=1,
+        stragglers=[]).line()
+
+
+# ---------------------------------------------------------------------------
+# Wired through the miner
+# ---------------------------------------------------------------------------
+
+
+def test_fimi_run_carries_progress():
+    import jax
+
+    from repro.core import eclat, fimi
+    from repro.data.ibm_gen import generate_dense, params_from_name
+
+    dense = generate_dense(params_from_name("T0.5I0.024P8PL5TL8"))
+    params = fimi.FimiParams(
+        min_support_rel=0.08, n_db_sample=256, n_fi_sample=256,
+        eclat=eclat.EclatConfig(max_out=1 << 14, max_stack=4096,
+                                frontier_size=8),
+    )
+    res = fimi.run(fimi.shard_db(np.asarray(dense), 2), dense.shape[1],
+                   params, jax.random.PRNGKey(0))
+    assert res.progress is not None
+    assert res.progress.frac == pytest.approx(1.0)
+    assert len(res.progress.stragglers) == 2
+    assert all(s > 0 for s in res.progress.stragglers)

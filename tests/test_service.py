@@ -282,6 +282,27 @@ def test_per_request_spans_share_request_ids(indexed):
     assert "service/replica0/queue" in tracks
 
 
+def test_queue_depth_renders_as_counter_track(indexed):
+    """Enqueue and dequeue both sample the 'queue depth' counter series, so
+    Perfetto draws depth rising on submit and falling at batch cuts."""
+    engine = _engine(indexed)
+    masks = np.asarray(engine.pack(list(indexed[2])[:6]))
+    tr = obs_trace.TRACER
+    tr.enable()
+    svc = MiningService([engine], deadline_ms=20.0, auto_start=False)
+    tickets = [svc.submit("support", m) for m in masks]
+    svc.start()
+    _drain(svc, tickets)
+    svc.stop()
+    tr.disable()
+    samples = [e for e in tr.export()["traceEvents"]
+               if e.get("ph") == "C" and e.get("name") == "queue depth"]
+    depths = [e["args"]["depth"] for e in samples]
+    assert max(depths) >= 1          # staged while the dispatcher was parked
+    assert min(depths) == 0          # ... and drained back down
+    assert len(samples) >= len(masks)
+
+
 def test_slo_tracker_fed_by_service(indexed):
     engine = _engine(indexed)
     masks = np.asarray(engine.pack(list(indexed[2])[:8]))

@@ -179,6 +179,30 @@ def test_reader_residency_within_budget(tmp_path):
         BlockReader(s, host_budget_blocks=1)
 
 
+def test_reader_emits_host_bytes_counter_track(tmp_path):
+    """Block residency renders as a Perfetto counter track: live bytes rise
+    on read, fall on release; the peak lane matches the recorded high-water."""
+    from repro.obs import trace as obs_trace
+
+    dense = _random_dense(64, 40, seed=5)
+    s = _store_from_dense(tmp_path, dense, [16, 16, 16, 16])
+    r = BlockReader(s, host_budget_blocks=2)
+    obs_trace.TRACER.enable()
+    try:
+        for _ in r.device_blocks():
+            pass
+        samples = [e for e in obs_trace.TRACER.export()["traceEvents"]
+                   if e.get("ph") == "C" and e.get("name") == "host bytes"]
+    finally:
+        obs_trace.TRACER.disable()
+        obs_trace.TRACER.clear()
+    assert samples
+    lives = [e["args"]["live"] for e in samples]
+    assert max(lives) == r.peak_host_bytes > 0
+    assert lives[-1] == 0.0                      # everything released
+    assert all(e["args"]["peak"] <= r.peak_host_bytes for e in samples)
+
+
 def test_reader_budget_enforced(tmp_path):
     """A reader that somehow over-holds raises instead of silently growing."""
     dense = _random_dense(32, 16, seed=4)

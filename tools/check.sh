@@ -3,16 +3,19 @@
 # + the 4-host-device distributed-mining parity gate + the out-of-core
 # store parity gate + the fault-injection gate (kill-and-resume parity)
 # + the observability gate (traced run record + regression-gated report)
-# + the serving SLO gate (load harness within SLO + overload self-test).
+# + the serving SLO gate (load harness within SLO + overload self-test)
+# + the kernel-profile gate (all five families attributed, model-consistent)
+# + the perf-trajectory gate (BENCH_HISTORY.jsonl trend regression).
 #
 #   tools/check.sh            # everything
 #   tools/check.sh --tests    # tier-1 pytest only
-#   tools/check.sh --bench    # smoke benchmarks only
+#   tools/check.sh --bench    # smoke benchmarks + perf-trajectory gate only
 #   tools/check.sh --cluster  # 4-device cluster parity only
 #   tools/check.sh --store    # out-of-core store parity only
 #   tools/check.sh --faults   # fault-injection suite + kill/resume parity
 #   tools/check.sh --obs      # observability suite + trace/report gates
 #   tools/check.sh --serve    # serving SLO gate + overload self-test
+#   tools/check.sh --profile  # kernel-profiled mine + attribution gates
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -24,16 +27,18 @@ run_store=1
 run_faults=1
 run_obs=1
 run_serve=1
+run_profile=1
 case "${1:-}" in
-  --tests) run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_serve=0 ;;
-  --bench) run_tests=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_serve=0 ;;
-  --cluster) run_tests=0; run_bench=0; run_store=0; run_faults=0; run_obs=0; run_serve=0 ;;
-  --store) run_tests=0; run_bench=0; run_cluster=0; run_faults=0; run_obs=0; run_serve=0 ;;
-  --faults) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_obs=0; run_serve=0 ;;
-  --obs) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_serve=0 ;;
-  --serve) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0 ;;
+  --tests) run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_serve=0; run_profile=0 ;;
+  --bench) run_tests=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_serve=0; run_profile=0 ;;
+  --cluster) run_tests=0; run_bench=0; run_store=0; run_faults=0; run_obs=0; run_serve=0; run_profile=0 ;;
+  --store) run_tests=0; run_bench=0; run_cluster=0; run_faults=0; run_obs=0; run_serve=0; run_profile=0 ;;
+  --faults) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_obs=0; run_serve=0; run_profile=0 ;;
+  --obs) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_serve=0; run_profile=0 ;;
+  --serve) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_profile=0 ;;
+  --profile) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_serve=0 ;;
   "") ;;
-  *) echo "usage: tools/check.sh [--tests|--bench|--cluster|--store|--faults|--obs|--serve]" >&2; exit 2 ;;
+  *) echo "usage: tools/check.sh [--tests|--bench|--cluster|--store|--faults|--obs|--serve|--profile]" >&2; exit 2 ;;
 esac
 
 if [[ $run_tests -eq 1 ]]; then
@@ -43,7 +48,22 @@ fi
 
 if [[ $run_bench -eq 1 ]]; then
   echo "== smoke benchmarks (kernels + serve + stream + cluster + io) =="
+  # every invocation appends one stamped BENCH_HISTORY.jsonl row per suite
   python -m benchmarks.run --smoke
+  echo "== perf trajectory: trend regression vs trailing median =="
+  # the committed ledger rows come from other machines, so the absolute-
+  # timing keys carry cross-host variance; the gate flags catastrophic
+  # drift (> 2.5x the trailing median), not noise.  Tighten locally with
+  # a longer same-host history: obs_report regress --threshold 0.25
+  python -m repro.launch.obs_report regress --history BENCH_HISTORY.jsonl \
+    --threshold 1.5
+  # the gate must be able to fire: a synthetic 4x degradation of every
+  # newest value has to trip it (exit 1) — a pass here means it is broken
+  if python -m repro.launch.obs_report regress --history BENCH_HISTORY.jsonl \
+      --threshold 1.5 --degrade 4.0 >/dev/null 2>&1; then
+    echo "perf-trajectory gate FAILED: synthetic 4x degradation not detected" >&2
+    exit 1
+  fi
 fi
 
 if [[ $run_cluster -eq 1 ]]; then
@@ -136,6 +156,30 @@ if [[ $run_serve -eq 1 ]]; then
       --duration 4 --ramp 1 --window 2 --gate --no-dashboard \
       --bench-out ""; then
     echo "serve gate FAILED: injected overload did not trip the SLO" >&2
+    exit 1
+  fi
+fi
+
+if [[ $run_profile -eq 1 ]]; then
+  echo "== kernel profile: profiled demo mine (all five families) =="
+  # a profiled run must attribute every dispatch family: eager sweeps give
+  # per-call device-synced timing, the mine's while_loop work is loop-
+  # attributed; the record carries it all as kernels/* gauges
+  PROF_RUN="${PROF_RUN_DIR:-$(mktemp -d)/prof-run}"
+  python -m repro.launch.profile_demo --db T0.5I0.024P8PL5TL8 \
+    --support 0.08 -P 2 --trace "$PROF_RUN"
+  python -m repro.launch.obs_report kernels "$PROF_RUN" \
+    --require bitmap,multi,pair,subset,delta --check-model
+  echo "== kernel profile: injected model mismatch must fail the check =="
+  # scaling only the compute_ms gauges breaks modeled = max(compute, memory)
+  # against the published flop/byte/constant gauges — the consistency check
+  # must catch it (exit 1); a silent pass means --check-model is broken
+  PROF_BAD="$(mktemp -d)/prof-bad"
+  python -m repro.launch.obs_report inject-slowdown "$PROF_RUN" "$PROF_BAD" \
+    --factor 1.5 --match compute_ms
+  if python -m repro.launch.obs_report kernels "$PROF_BAD" --check-model \
+      >/dev/null 2>&1; then
+    echo "profile gate FAILED: injected model mismatch was not detected" >&2
     exit 1
   fi
 fi
