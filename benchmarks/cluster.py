@@ -132,6 +132,16 @@ def run(fast: bool = False, out_path: str = "BENCH_cluster.json"):
           f"improvement={improvement:.2f}x,"
           f"donations={len(res_rebal.report.donations)}", flush=True)
 
+    # the speedup-loss decomposition of every curve point (additive:
+    # inflation + imbalance = ideal − measured, exactly) — flat loss_* keys
+    # so the perf ledger tracks WHY the speedup moves, not just that it did
+    from repro.obs import speedup as speedup_mod
+
+    loss_keys = speedup_mod.bench_loss_keys(entries)
+    for P_wf, wf in sorted(speedup_mod.from_bench_entries(entries).items()):
+        print(f"cluster.loss[P={P_wf}]," + ",".join(
+            f"{t.name}={t.loss_x:.3f}x" for t in wf.terms), flush=True)
+
     payload = {
         "bench": "cluster",
         "backend": jax.default_backend(),
@@ -140,6 +150,7 @@ def run(fast: bool = False, out_path: str = "BENCH_cluster.json"):
         "fast": fast,
         "speedup_1_to_4": speedups[4],
         "rebalance_improvement": improvement,
+        **loss_keys,
         "meta": bench_meta(backend=jax.default_backend()),
         "entries": entries,
     }

@@ -92,6 +92,7 @@ def _rounds_to_json(rounds) -> list:
             est_mined=np.asarray(r.est_mined).astype(float).tolist(),
             replication=float(r.replication),
             donations=[list(d) for d in r.donations],
+            mine_ms=float(getattr(r, "mine_ms", 0.0)),
         )
         for r in rounds
     ]
@@ -110,6 +111,7 @@ def _rounds_from_json(data: list) -> list:
             donations=[
                 Donation(*map(int, t)) for t in d["donations"]
             ],
+            mine_ms=float(d.get("mine_ms", 0.0)),
         )
         for d in data
     ]

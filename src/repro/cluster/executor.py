@@ -112,6 +112,7 @@ class RoundStats:
     est_mined: np.ndarray           # float [P] — planner units mined
     replication: float              # Phase-3 Σ|D'_i| / |D| for this round
     donations: List[rebalance_mod.Donation]
+    mine_ms: float = 0.0            # this round's mine-phase wall (host)
 
 
 @dataclasses.dataclass
@@ -181,9 +182,24 @@ class ClusterReport:
         for p in range(self.P):
             gauges[f"cluster/shard{p}/est_load"] = float(self.est_loads[p])
             gauges[f"cluster/shard{p}/obs_load"] = float(self.observed_loads[p])
+        for r in self.rounds:
+            # per-round detail the speedup waterfall's compile term needs
+            gauges[f"cluster/round{r.round_index}/mine_ms"] = float(r.mine_ms)
+            gauges[f"cluster/round{r.round_index}/max_trips"] = (
+                float(np.max(r.work_iters)) if len(r.work_iters) else 0.0
+            )
         hist = obs_metrics.Histogram("cluster/round_makespan_trips")
         for r in self.rounds:
             hist.record(float(np.max(r.work_iters)) if len(r.work_iters) else 0.0)
+        # the additive speedup-loss decomposition rides along: every run
+        # record with cluster gauges also carries its own waterfall
+        from repro.obs import speedup as speedup_mod
+
+        wf = speedup_mod.from_snapshot(
+            {"counters": counters, "gauges": gauges, "histograms": {}}
+        )
+        if wf is not None:
+            gauges.update(wf.gauges())
         return {
             "counters": counters,
             "gauges": gauges,
@@ -201,6 +217,18 @@ class ClusterReport:
         h = reg.histogram("cluster/round_makespan_trips")
         for r in self.rounds:
             h.record(float(np.max(r.work_iters)) if len(r.work_iters) else 0.0)
+
+    def republish_gauges(
+        self, reg: Optional[obs_metrics.MetricsRegistry] = None
+    ) -> None:
+        """Re-set the gauge family (gauges only — counters/histograms would
+        double-count).  Drivers call this after back-patching ``phase_ms``
+        with work that happened outside :func:`execute` (off-disk planning,
+        block-streamed assembly), so the recorded waterfall charges it to
+        ``host_tail`` instead of the unexplained driver residual."""
+        reg = reg if reg is not None else obs_metrics.registry()
+        for name, v in self.snapshot()["gauges"].items():
+            reg.gauge(name).set(float(v))
 
 
 @dataclasses.dataclass
@@ -494,6 +522,7 @@ def execute(
                 est_mined=est_mined,
                 replication=float(np.asarray(out3.replication).reshape(-1)[0]),
                 donations=moved,
+                mine_ms=mine_s * 1e3,
             )
         )
         r += 1

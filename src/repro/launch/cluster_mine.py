@@ -31,9 +31,27 @@ from repro.launch.host_devices import preparse_devices
 
 preparse_devices()  # must run before anything imports jax
 
+import dataclasses  # noqa: E402
 import time  # noqa: E402
 
 import numpy as np  # noqa: E402
+
+
+def _skew_plan(plan):
+    """Fault injection (``--force-skew``): pile every class onto shard 0.
+
+    The estimated loads move with the assignment, so the skew is *planned*
+    and predicted — pure imbalance, zero estimation error — which is
+    exactly the shape the doctor's "imbalance dominates / rebalance not
+    engaging" self-test needs to see.
+    """
+    assignment = np.zeros_like(plan.assignment)
+    est_loads = np.zeros_like(plan.est_loads)
+    if est_loads.shape[0]:
+        est_loads[0] = float(np.sum(plan.est_loads))
+    return dataclasses.replace(
+        plan, assignment=assignment, est_loads=est_loads
+    )
 
 
 def run_once(dense, n_items, P, args, eclat_mod, fimi_mod, cluster,
@@ -59,9 +77,13 @@ def run_once(dense, n_items, P, args, eclat_mod, fimi_mod, cluster,
             max_out=1 << 15, max_stack=8192, frontier_size=args.frontier
         ),
         chunk=args.chunk or None,
-        rebalance=not args.no_rebalance,
+        # --force-skew also pins rebalancing off: the injected skew must
+        # survive to the report for the self-test to observe it
+        rebalance=not (args.no_rebalance
+                       or getattr(args, "force_skew", False)),
         skew_threshold=args.skew,
     )
+    force_skew = getattr(args, "force_skew", False)
     key = jax.random.PRNGKey(args.seed)
     ck = dict(
         checkpoint_dir=getattr(args, "checkpoint", "") or None,
@@ -76,6 +98,8 @@ def run_once(dense, n_items, P, args, eclat_mod, fimi_mod, cluster,
         from repro.store.reader import to_device_shards
 
         plan = cluster.plan(store, None, params.planner, key, P=P)
+        if force_skew:
+            plan = _skew_plan(plan)
         t1 = time.perf_counter()
         shards = jax.block_until_ready(to_device_shards(store, P))
         t2 = time.perf_counter()
@@ -84,9 +108,19 @@ def run_once(dense, n_items, P, args, eclat_mod, fimi_mod, cluster,
         # planning + block-streamed assembly where they actually happened
         res.report.phase_ms["plan"] = (t1 - t0) * 1e3
         res.report.phase_ms["assemble"] = (t2 - t1) * 1e3
+        res.report.republish_gauges()
     else:
         shards = fimi_mod.shard_db(dense, P)
-        res = cluster.execute(shards, n_items, params, key, **ck)
+        if force_skew:
+            plan = _skew_plan(cluster.plan(shards, n_items,
+                                           params.planner, key))
+            t1 = time.perf_counter()
+            res = cluster.execute(shards, n_items, params, key, plan=plan,
+                                  **ck)
+            res.report.phase_ms["plan"] = (t1 - t0) * 1e3
+            res.report.republish_gauges()
+        else:
+            res = cluster.execute(shards, n_items, params, key, **ck)
     return res, time.perf_counter() - t0
 
 
@@ -135,6 +169,10 @@ def main():
     ap.add_argument("--skew", type=float, default=1.25,
                     help="rebalance when remaining max/mean exceeds this")
     ap.add_argument("--no-rebalance", action="store_true")
+    ap.add_argument("--force-skew", action="store_true", dest="force_skew",
+                    help="fault injection: assign every equivalence class "
+                         "to shard 0 and disable rebalancing — the doctor's "
+                         "'imbalance dominates' self-test")
     ap.add_argument("--curve", default="",
                     help="comma-separated device counts for a speedup curve")
     ap.add_argument("--parity", action="store_true",

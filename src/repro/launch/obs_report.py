@@ -47,14 +47,28 @@ Subcommands::
       gauges and exits 1 on mismatch.
 
   history [--history BENCH_HISTORY.jsonl] [--suite S] [--key SUBSTR]
+          [--format text|markdown]
       Render per-key trends from the perf ledger (newest last, with the
       git SHA each row was stamped with).
 
   regress [--history BENCH_HISTORY.jsonl] [--threshold 0.25] [--window 8]
+          [--direction KEY=up|down ...] [--format text|markdown]
       Gate the newest ledger row: exit 1 when any directional key degraded
       past the threshold vs its trailing median (``repro.obs.perfdb``).
       ``--degrade F`` synthetically worsens the newest values first — the
       deterministic proof in tools/check.sh that the gate can fire.
+      ``--direction`` overrides the name-inferred better-direction per key.
+
+  critpath RUN_DIR [--top N] [--path] [--format text|json]
+      Reconstruct the span DAG of a traced run and print the critical-path
+      table: on-path exclusive self-time by span name, straggler lanes and
+      all (``repro.obs.critpath``).
+
+  doctor RUN_DIR [--history LEDGER] [--format text|json|markdown] [--gate]
+      The performance doctor: critical path + speedup-loss waterfall +
+      ranked findings with evidence keys and remediation hints
+      (``repro.obs.doctor``).  ``--gate`` exits 1 when any severity>=error
+      finding fires — the CI hook.
 
 Exit codes: 0 ok, 1 regression detected, 2 usage / unreadable record.
 """
@@ -67,7 +81,7 @@ import os
 import sys
 from typing import Dict, Iterable, List, Optional, Tuple
 
-from repro.obs import perfdb, runlog
+from repro.obs import critpath, doctor, perfdb, runlog
 
 #: gauge/summary names treated as durations (the regression-gated set)
 _TIME_SUFFIXES = ("_ms", "_s", "wall_s")
@@ -116,18 +130,23 @@ def _load(run_dir: str) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def _span_totals(trace: Optional[dict]) -> List[Tuple[str, float, int]]:
-    """(name, total_ms, count) per complete-event span, longest first."""
-    if not trace:
+def _span_totals(trace: Optional[dict]) -> List[dict]:
+    """Per-name span rows — inclusive total AND exclusive self-time.
+
+    One implementation: :func:`repro.obs.critpath.exclusive_totals` over
+    the reconstructed span DAG, so long parents (``fimi/phase4_mine``)
+    stop masking the children nested inside them.  Longest-self first.
+    """
+    dag = critpath.build(trace)
+    if dag is None:
         return []
-    acc: Dict[str, List[float]] = {}
-    for ev in trace.get("traceEvents", []):
-        if ev.get("ph") == "X":
-            acc.setdefault(ev["name"], []).append(ev.get("dur", 0) / 1e3)
-    return sorted(
-        ((n, sum(d), len(d)) for n, d in acc.items()),
-        key=lambda t: -t[1],
-    )
+    rows = [
+        {"name": name, "total_ms": r["total_ms"], "self_ms": r["self_ms"],
+         "count": int(r["count"])}
+        for name, r in critpath.exclusive_totals(dag).items()
+    ]
+    rows.sort(key=lambda r: (-r["self_ms"], -r["total_ms"]))
+    return rows
 
 
 def _summary_digest(run: dict) -> dict:
@@ -152,10 +171,7 @@ def _summary_digest(run: dict) -> dict:
         "counters": m.get("counters") or {},
         "gauges": m.get("gauges") or {},
         "histograms": m.get("histograms") or {},
-        "spans": [
-            {"name": n, "total_ms": tot, "count": cnt}
-            for n, tot, cnt in _span_totals(run["trace"])
-        ],
+        "spans": _span_totals(run["trace"]),
     }
 
 
@@ -199,8 +215,9 @@ def _render_markdown(d: dict, max_events: int, max_gauges: int) -> str:
         ]
     if d["spans"]:
         out += ["", "#### trace spans", "",
-                "| span | total ms | count |", "|---|---|---|"]
-        out += [f"| {s['name']} | {s['total_ms']:.2f} | {s['count']} |"
+                "| span | total ms | self ms | count |", "|---|---|---|---|"]
+        out += [f"| {s['name']} | {s['total_ms']:.2f} | {s['self_ms']:.2f} "
+                f"| {s['count']} |"
                 for s in d["spans"][:12]]
         out.append(f"\n(trace: `{d['run_dir']}/trace.json` — loads in "
                    f"[ui.perfetto.dev](https://ui.perfetto.dev))")
@@ -251,10 +268,10 @@ def cmd_summary(args) -> int:
             print(f"  {k}: n={s['count']} mean={s['mean']:.4g} "
                   f"p50={s['p50']:.4g} p95={s['p95']:.4g} max={s['max']:.4g}")
     if d["spans"]:
-        print("trace spans (total ms):")
+        print("trace spans (inclusive total / exclusive self ms):")
         for s in d["spans"][:12]:
             print(f"  {s['name']:<28} {s['total_ms']:>10.2f}ms  "
-                  f"x{s['count']}")
+                  f"self {s['self_ms']:>10.2f}ms  x{s['count']}")
         print(f"  -> load {d['run_dir']}/trace.json in "
               f"https://ui.perfetto.dev or chrome://tracing")
     return 0
@@ -613,6 +630,22 @@ def cmd_history(args) -> int:
     if not series:
         print("obs_report history: no matching keys", file=sys.stderr)
         return 2
+    if args.format == "markdown":
+        print(f"### perf history `{args.history}` "
+              f"({len(rows)} rows, {len(series)} series)")
+        print()
+        print("| suite/key | dir | min | max | trailing values "
+              "(newest last) |")
+        print("|---|---|---|---|---|")
+        for (suite, key), pts in sorted(series.items()):
+            d = perfdb.direction(key)
+            tail = pts[-args.last:]
+            vals = " ".join(f"{p['value']:.4g}" for p in tail)
+            lo = min(p["value"] for p in pts)
+            hi = max(p["value"] for p in pts)
+            print(f"| `{suite}/{key}` | {d or '—'} | {lo:.4g} | {hi:.4g} "
+                  f"| {vals} |")
+        return 0
     print(f"{args.history}: {len(rows)} rows, {len(series)} series")
     for (suite, key), pts in sorted(series.items()):
         d = perfdb.direction(key)
@@ -627,6 +660,19 @@ def cmd_history(args) -> int:
     return 0
 
 
+def _parse_directions(specs: List[str]) -> Dict[str, str]:
+    """``KEY=up|down`` (CLI speak) → {key: "higher"|"lower"} (perfdb's)."""
+    out: Dict[str, str] = {}
+    for spec in specs:
+        key, _, word = spec.partition("=")
+        if word not in ("up", "down") or not key:
+            print(f"obs_report regress: bad --direction {spec!r} "
+                  f"(want KEY=up or KEY=down)", file=sys.stderr)
+            sys.exit(2)
+        out[key] = "higher" if word == "up" else "lower"
+    return out
+
+
 def cmd_regress(args) -> int:
     rows, _ = _load_history(args.history)
     found, checked = perfdb.check_regressions(
@@ -635,9 +681,27 @@ def cmd_regress(args) -> int:
         window=args.window,
         min_history=args.min_history,
         degrade=args.degrade,
+        direction_overrides=_parse_directions(args.direction),
     )
     label = f" (values degraded x{args.degrade} first)" \
         if args.degrade != 1.0 else ""
+    if args.format == "markdown":
+        print(f"### perf regressions `{args.history}`")
+        print()
+        print(f"{len(rows)} rows, {checked} gated key(s), threshold "
+              f"+{args.threshold:.0%}{label}")
+        print()
+        if found:
+            print("| suite/key | latest | trailing median | worse by |")
+            print("|---|---|---|---|")
+            for reg in found:
+                print(f"| `{reg.suite}/{reg.key}` | {reg.latest:.4g} "
+                      f"| {reg.median:.4g} | {reg.ratio:.2f}× |")
+            print()
+            print(f"**REGRESSION:** {len(found)} key(s) degraded")
+            return 1
+        print("ok: no key degraded past the threshold")
+        return 0
     print(f"{args.history}: {len(rows)} rows, {checked} gated key(s), "
           f"threshold +{args.threshold:.0%}{label}")
     if found:
@@ -646,6 +710,59 @@ def cmd_regress(args) -> int:
         print(f"REGRESSION: {len(found)} key(s) degraded vs trailing median")
         return 1
     print("ok: no key degraded past the threshold")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# critpath / doctor (the diagnosis layer)
+# ---------------------------------------------------------------------------
+
+
+def cmd_critpath(args) -> int:
+    run = _load(args.run)
+    cp = critpath.analyze(run.get("trace"), top_n=args.top)
+    if cp is None:
+        print(f"obs_report critpath: no trace spans in {args.run} "
+              f"(was the run launched with --trace?)", file=sys.stderr)
+        return 2
+    if args.format == "json":
+        print(json.dumps(cp, indent=2))
+        return 0
+    print(f"critical path of {args.run} (wall {cp['wall_ms']:.1f} ms)")
+    print(f"  {'self ms':>10}  {'share':>6}  {'n':>3}  name")
+    for r in cp["table"]:
+        print(f"  {r['self_ms']:>10.2f}  {r['share']:>6.1%}  "
+              f"{r['count']:>3d}  {r['name']}"
+              + (f"  [{r['tracks']}]" if r["tracks"] else ""))
+    if args.path:
+        print("path (pre-order, on-path self time):")
+        for seg in cp["path"]:
+            pad = "  " * seg["depth"]
+            print(f"  {pad}{seg['name']}  dur={seg['dur_ms']:.2f}ms "
+                  f"self={seg['self_ms']:.2f}ms"
+                  + (f"  [{seg['track']}]" if seg["track"] else ""))
+    return 0
+
+
+def cmd_doctor(args) -> int:
+    run = _load(args.run)
+    history_rows = None
+    if args.history and os.path.exists(args.history):
+        try:
+            history_rows, _ = perfdb.load(args.history)
+        except OSError:
+            history_rows = None
+    report = doctor.diagnose(run, history_rows=history_rows, top_n=args.top)
+    if args.format == "json":
+        print(json.dumps(report, indent=2))
+    elif args.format == "markdown":
+        print(doctor.render_markdown(report))
+    else:
+        print(doctor.render_text(report))
+    if args.gate and doctor._RANK[report["worst"]] >= doctor._RANK["error"]:
+        print(f"DOCTOR GATE: severity {report['worst']} finding(s) present",
+              file=sys.stderr)
+        return 1
     return 0
 
 
@@ -728,6 +845,8 @@ def main(argv: Optional[Iterable[str]] = None) -> int:
     h.add_argument("--key", default="", help="only keys containing this")
     h.add_argument("--last", type=int, default=12,
                    help="values shown per series (newest last)")
+    h.add_argument("--format", choices=("text", "markdown"), default="text",
+                   help="markdown renders a CI step-summary table")
     h.set_defaults(fn=cmd_history)
 
     r = sub.add_parser("regress",
@@ -744,7 +863,39 @@ def main(argv: Optional[Iterable[str]] = None) -> int:
     r.add_argument("--degrade", type=float, default=1.0,
                    help="synthetically worsen newest values by this factor "
                         "(failing-partner self-test)")
+    r.add_argument("--direction", action="append", default=[],
+                   metavar="KEY=up|down",
+                   help="override the name-inferred better-direction of a "
+                        "key (up = higher is better); repeatable")
+    r.add_argument("--format", choices=("text", "markdown"), default="text",
+                   help="markdown renders a CI step-summary table")
     r.set_defaults(fn=cmd_regress)
+
+    c = sub.add_parser("critpath",
+                       help="critical path + exclusive self-time of one "
+                            "traced run")
+    c.add_argument("run")
+    c.add_argument("--top", type=int, default=10,
+                   help="rows in the by-name critical-path table")
+    c.add_argument("--path", action="store_true",
+                   help="also print the full pre-order path")
+    c.add_argument("--format", choices=("text", "json"), default="text")
+    c.set_defaults(fn=cmd_critpath)
+
+    o = sub.add_parser("doctor",
+                       help="diagnose one run record: critical path, "
+                            "speedup waterfall, ranked findings")
+    o.add_argument("run")
+    o.add_argument("--history", default=perfdb.DEFAULT_PATH,
+                   help="perf ledger for trend rules (missing file: rules "
+                        "needing history are skipped)")
+    o.add_argument("--top", type=int, default=10,
+                   help="rows in the critical-path table")
+    o.add_argument("--format", choices=("text", "json", "markdown"),
+                   default="text")
+    o.add_argument("--gate", action="store_true",
+                   help="exit 1 when any severity>=error finding fires")
+    o.set_defaults(fn=cmd_doctor)
 
     args = ap.parse_args(list(argv) if argv is not None else None)
     return args.fn(args)

@@ -22,8 +22,16 @@ jax-free report CLI.  See DESIGN.md, "Observability".
   * :mod:`repro.obs.progress` — the sample-grounded live progress/ETA
     estimator fed by planner loads and observed DFS trips;
   * :mod:`repro.obs.perfdb`  — the persistent perf trajectory
-    (``BENCH_HISTORY.jsonl`` append / trend / regression check).
+    (``BENCH_HISTORY.jsonl`` append / trend / regression check);
+  * :mod:`repro.obs.critpath` — span-DAG reconstruction over a run
+    record's ``trace.json``: critical path + exclusive self-time;
+  * :mod:`repro.obs.speedup` — the additive speedup-loss waterfall
+    (imbalance / Thm 6.1 estimation error / exchange / compile / host);
+  * :mod:`repro.obs.doctor`  — the rules engine turning snapshot +
+    critical path + waterfall into ranked findings with evidence keys.
 """
+from repro.obs.critpath import SpanDag, critical_path  # noqa: F401
+from repro.obs.doctor import Finding, Thresholds, diagnose  # noqa: F401
 from repro.obs.machine import MachineModel, machine_for_backend  # noqa: F401
 from repro.obs.metrics import (  # noqa: F401
     Counter,
@@ -37,6 +45,7 @@ from repro.obs.profile import KernelProfiler, cost_model, profiler  # noqa: F401
 from repro.obs.perfdb import check_regressions, trends  # noqa: F401
 from repro.obs.progress import ProgressEstimator, ProgressSnapshot  # noqa: F401
 from repro.obs.runlog import RunLog, load_run  # noqa: F401
+from repro.obs.speedup import LossTerm, Waterfall  # noqa: F401
 from repro.obs.slo import (  # noqa: F401
     SLOPolicy,
     SLOStatus,

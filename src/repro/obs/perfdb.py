@@ -42,7 +42,8 @@ from repro.obs.runlog import git_sha as _full_git_sha
 #: Default ledger file, at the repo root next to the BENCH_*.json it tracks.
 DEFAULT_PATH = "BENCH_HISTORY.jsonl"
 
-_LOWER_SUBSTR = ("overhead", "slowdown", "stall", "latency", "burn_rate")
+_LOWER_SUBSTR = ("overhead", "slowdown", "stall", "latency", "burn_rate",
+                 "loss")
 _LOWER_SUFFIX = ("_ms", "_s", "_us", "_bytes")
 _HIGHER_SUBSTR = ("speedup", "improvement")
 _HIGHER_SUFFIX = ("_qps", "_frac")
@@ -178,6 +179,7 @@ def check_regressions(
     window: int = 8,
     min_history: int = 2,
     degrade: float = 1.0,
+    direction_overrides: Optional[Dict[str, str]] = None,
 ) -> Tuple[List[Regression], int]:
     """Judge each directional key's newest value against its own history.
 
@@ -187,12 +189,16 @@ def check_regressions(
     before they gate — a brand-new metric can't regress.  ``degrade``
     synthetically worsens every newest value by that factor first: the
     deterministic failing partner ``tools/check.sh`` uses to prove the
-    gate can fire.  Returns (regressions, n_keys_gated).
+    gate can fire.  ``direction_overrides`` ({key: "lower"|"higher"})
+    wins over the name-inferred direction — the escape hatch for keys the
+    naming convention misreads (and a way to gate an otherwise-untracked
+    key).  Returns (regressions, n_keys_gated).
     """
     checked = 0
     found: List[Regression] = []
+    overrides = direction_overrides or {}
     for (suite, key), series in sorted(trends(rows).items()):
-        d = direction(key)
+        d = overrides.get(key) or direction(key)
         if d is None or len(series) < min_history + 1:
             continue
         prior = [p["value"] for p in series[:-1]][-window:]

@@ -21,7 +21,9 @@ from __future__ import annotations
 
 import argparse
 import atexit
+import os
 import signal
+import tempfile
 import threading
 from typing import Optional
 
@@ -49,6 +51,11 @@ def add_obs_flags(ap: argparse.ArgumentParser) -> None:
                         "modeled attribution published into the run record "
                         "(render with obs_report kernels; needs --trace or "
                         "--metrics)")
+    g.add_argument("--doctor", action="store_true",
+                   help="diagnose this run at exit: critical path, speedup "
+                        "waterfall, and the doctor's ranked findings "
+                        "(records to a temp dir unless --trace/--metrics "
+                        "names one; implies span tracing)")
 
 
 class ObsSession:
@@ -64,7 +71,8 @@ class ObsSession:
 
     def __init__(self, run_dir: str, name: str, config: dict,
                  trace_on: bool, jax_profile: str = "",
-                 profile_on: bool = False):
+                 profile_on: bool = False, doctor_on: bool = False):
+        self._doctor_on = doctor_on
         # a fresh registry state so the record contains exactly this run
         obs_metrics.reset()
         self.tracer = obs_trace.tracer()
@@ -159,21 +167,42 @@ class ObsSession:
             self.tracer.disable()
         print(f"obs: run record written to {self.run_dir}"
               + (" (trace.json loads in Perfetto)" if "trace.json" in
-                 __import__("os").listdir(self.run_dir) else ""))
+                 os.listdir(self.run_dir) else ""))
+        if self._doctor_on:
+            self._print_diagnosis()
         return self.run_dir
+
+    def _print_diagnosis(self) -> None:
+        """The ``--doctor`` exit hook: diagnose the sealed record, print."""
+        from repro.obs import doctor as obs_doctor
+        from repro.obs import perfdb
+        from repro.obs.runlog import load_run
+
+        rows = None
+        if os.path.exists(perfdb.DEFAULT_PATH):
+            rows, _ = perfdb.load(perfdb.DEFAULT_PATH)
+        report = obs_doctor.diagnose(
+            load_run(self.run_dir), history_rows=rows)
+        print(obs_doctor.render_text(report))
 
 
 def start_session(args, name: str,
                   config: Optional[dict] = None) -> Optional[ObsSession]:
     """Build the session the driver's flags ask for (None when neither)."""
     run_dir = getattr(args, "trace", "") or getattr(args, "metrics", "")
+    doctor_on = bool(getattr(args, "doctor", False))
     if not run_dir:
-        return None
+        if not doctor_on:
+            return None
+        # --doctor alone still needs a record to diagnose: a temp one
+        run_dir = tempfile.mkdtemp(prefix=f"doctor-{name}-")
     return ObsSession(
         run_dir,
         name,
         config if config is not None else dict(vars(args)),
-        trace_on=bool(getattr(args, "trace", "")),
+        # the doctor's critical path needs spans, so --doctor implies tracing
+        trace_on=bool(getattr(args, "trace", "")) or doctor_on,
         jax_profile=getattr(args, "jax_profile", ""),
         profile_on=bool(getattr(args, "profile", False)),
+        doctor_on=doctor_on,
     )

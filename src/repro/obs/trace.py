@@ -36,7 +36,16 @@ from __future__ import annotations
 import json
 import threading
 import time
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, Optional
+
+#: Default event-buffer cap.  Long soak runs (``serve_load``) otherwise grow
+#: the buffer — and the exported trace.json — without bound; at the cap the
+#: oldest events are dropped (the *recent* timeline is the diagnostic one)
+#: and the drop is accounted: a ``trace/dropped_events`` counter plus a
+#: ``truncated_events`` note in the exported JSON, which the doctor's
+#: ``trace-truncated`` rule surfaces.
+DEFAULT_MAX_EVENTS = 500_000
 
 
 class _NullSpan:
@@ -77,10 +86,14 @@ class _Span:
 class Tracer:
     """Thread-safe span recorder with Chrome trace-event JSON export."""
 
-    def __init__(self, enabled: bool = False):
+    def __init__(
+        self, enabled: bool = False, max_events: int = DEFAULT_MAX_EVENTS
+    ):
         self._enabled = enabled
+        self._max_events = max(1, int(max_events))
+        self._events: Deque[dict] = deque(maxlen=self._max_events)
+        self._dropped = 0
         self._t_base = time.monotonic()
-        self._events: List[dict] = []
         self._track_names: Dict[int, str] = {}
         self._lock = threading.Lock()
 
@@ -99,7 +112,34 @@ class Tracer:
         with self._lock:
             self._events.clear()
             self._track_names.clear()
+            self._dropped = 0
         self._t_base = time.monotonic()
+
+    def set_max_events(self, max_events: int) -> None:
+        """Re-cap the buffer (keeping the newest events that still fit)."""
+        with self._lock:
+            self._max_events = max(1, int(max_events))
+            old = self._events
+            self._dropped += max(0, len(old) - self._max_events)
+            self._events = deque(old, maxlen=self._max_events)
+
+    @property
+    def max_events(self) -> int:
+        return self._max_events
+
+    @property
+    def dropped_events(self) -> int:
+        with self._lock:
+            return self._dropped
+
+    def _append_locked(self, ev: dict) -> None:
+        # deque(maxlen) silently evicts the oldest; account for it first
+        if len(self._events) == self._max_events:
+            self._dropped += 1
+            from repro.obs import metrics as _metrics  # lazy: cold path only
+
+            _metrics.registry().counter("trace/dropped_events").inc()
+        self._events.append(ev)
 
     # -- recording -----------------------------------------------------------
     def span(self, name: str, **args):
@@ -128,7 +168,7 @@ class Tracer:
         if args:
             ev["args"] = args
         with self._lock:
-            self._events.append(ev)
+            self._append_locked(ev)
 
     def add_span(
         self,
@@ -170,7 +210,7 @@ class Tracer:
             "args": {k: float(v) for k, v in values.items()},
         }
         with self._lock:
-            self._events.append(ev)
+            self._append_locked(ev)
 
     def instant(self, name: str, **args) -> None:
         """A zero-duration marker event (drift fired, checkpoint saved…)."""
@@ -188,7 +228,7 @@ class Tracer:
         if args:
             ev["args"] = args
         with self._lock:
-            self._events.append(ev)
+            self._append_locked(ev)
 
     # -- device helper -------------------------------------------------------
     def sync(self, value, name: str = "device_sync"):
@@ -215,6 +255,7 @@ class Tracer:
         with self._lock:
             events = list(self._events)
             tracks = dict(self._track_names)
+            dropped = self._dropped
         meta = [
             {
                 "ph": "M",
@@ -225,7 +266,10 @@ class Tracer:
             }
             for tid, tname in sorted(tracks.items())
         ]
-        return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+        out = {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+        if dropped:
+            out["truncated_events"] = dropped   # oldest `dropped` evicted
+        return out
 
     def write(self, path: str) -> str:
         with open(path, "w") as f:

@@ -100,6 +100,12 @@ class BlockReader:
         )
 
     def _read_host(self, i: int) -> np.ndarray:
+        # fault injection for the doctor's prefetch-stall self-test: a
+        # per-block read delay the double buffer cannot hide on small DBs
+        delay = float(os.environ.get("REPRO_STORE_READ_DELAY_S", "0") or 0)
+        if delay > 0:
+            time.sleep(delay)
+
         def attempt() -> np.ndarray:
             with self._lock:
                 self.read_attempts += 1

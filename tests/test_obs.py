@@ -653,3 +653,89 @@ def test_mine_driver_trace_smoke(tmp_path):
     assert any(k.startswith("fimi/shard") for k in metrics["gauges"])
     # the record is diffable against itself through the CLI
     assert obs_report.main(["diff", str(run_dir), str(run_dir)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Tracer event cap: drop-oldest, dropped-event accounting, truncation note
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_cap_drops_oldest_and_counts():
+    tr = obs_trace.Tracer(enabled=True, max_events=5)
+    for i in range(8):
+        tr.instant(f"ev{i}")
+    assert tr.n_events == 5
+    assert tr.dropped_events == 3
+    out = tr.export()
+    names = [e["name"] for e in out["traceEvents"] if e["ph"] == "i"]
+    assert names == ["ev3", "ev4", "ev5", "ev6", "ev7"]   # a suffix
+    assert out["truncated_events"] == 3
+    # the drop is visible as a metric too (the doctor's evidence key)
+    snap = obs_metrics.snapshot()
+    assert snap["counters"]["trace/dropped_events"] == 3
+
+
+def test_tracer_uncapped_export_has_no_truncation_note():
+    tr = obs_trace.Tracer(enabled=True, max_events=100)
+    with tr.span("a"):
+        pass
+    out = tr.export()
+    assert "truncated_events" not in out
+    assert tr.dropped_events == 0
+
+
+def test_tracer_set_max_events_recaps_keeping_newest():
+    tr = obs_trace.Tracer(enabled=True, max_events=100)
+    for i in range(10):
+        tr.instant(f"ev{i}")
+    tr.set_max_events(4)
+    assert tr.max_events == 4 and tr.n_events == 4
+    assert tr.dropped_events == 6
+    names = [e["name"] for e in tr.export()["traceEvents"]
+             if e["ph"] == "i"]
+    assert names == ["ev6", "ev7", "ev8", "ev9"]
+
+
+def test_tracer_clear_resets_dropped():
+    tr = obs_trace.Tracer(enabled=True, max_events=2)
+    for i in range(5):
+        tr.instant(f"ev{i}")
+    assert tr.dropped_events == 3
+    tr.clear()
+    assert tr.dropped_events == 0 and tr.n_events == 0
+
+
+# ---------------------------------------------------------------------------
+# summary: exclusive self-time via the critpath DAG (one implementation)
+# ---------------------------------------------------------------------------
+
+
+def test_summary_spans_carry_exclusive_self_time(tmp_path, capsys):
+    reg = obs_metrics.registry()
+    reg.counter("fimi/runs").inc()
+    tr = obs_trace.TRACER
+    tr.enable()
+    with tr.span("outer"):
+        with tr.span("inner"):
+            pass
+    log = runlog.RunLog(str(tmp_path / "run"), "selftime", {})
+    log.finish(metrics_snapshot=obs_metrics.snapshot(), tracer=tr)
+    tr.disable()
+
+    assert obs_report.main(
+        ["summary", str(tmp_path / "run"), "--format", "json"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    spans = {s["name"]: s for s in out["spans"]}
+    assert set(spans) == {"outer", "inner"}
+    for s in out["spans"]:
+        assert set(s) >= {"name", "total_ms", "self_ms", "count"}
+    # the child's time is excluded from the parent's self time
+    assert spans["outer"]["self_ms"] == pytest.approx(
+        spans["outer"]["total_ms"] - spans["inner"]["total_ms"], abs=0.5)
+    assert spans["inner"]["self_ms"] == pytest.approx(
+        spans["inner"]["total_ms"])
+
+    # and the markdown table grew the column
+    assert obs_report.main(
+        ["summary", str(tmp_path / "run"), "--format", "markdown"]) == 0
+    assert "self ms" in capsys.readouterr().out

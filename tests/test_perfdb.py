@@ -202,3 +202,70 @@ def test_cli_regress_skips_corrupt_lines(tmp_path, capsys):
         f.write('{"torn\n')
     assert obs_report.main(["regress", "--history", str(p)]) == 0
     assert "skipped 1 corrupt line" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Direction overrides and the markdown renderings
+# ---------------------------------------------------------------------------
+
+
+def test_direction_override_flips_the_verdict(tmp_path):
+    # "n_fis" has no inferable direction: untracked by default...
+    rows = []
+    p = tmp_path / "h.jsonl"
+    _seed(p, [100.0, 100.0, 40.0], key="n_fis")
+    rows, _ = perfdb.load(str(p))
+    found, checked = perfdb.check_regressions(rows)
+    assert checked == 0 and found == []
+    # ...an override gates it, and can also flip an inferred direction
+    found, checked = perfdb.check_regressions(
+        rows, direction_overrides={"n_fis": "higher"})
+    assert checked == 1
+    assert [f.key for f in found] == ["n_fis"]
+    found, _ = perfdb.check_regressions(
+        rows, direction_overrides={"n_fis": "lower"})
+    assert found == []
+
+
+def test_cli_regress_direction_flag(tmp_path, capsys):
+    p = tmp_path / "h.jsonl"
+    _seed(p, [100.0, 100.0, 40.0], key="n_fis")
+    assert obs_report.main(["regress", "--history", str(p)]) == 0
+    assert obs_report.main(["regress", "--history", str(p),
+                            "--direction", "n_fis=up"]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+    assert obs_report.main(["regress", "--history", str(p),
+                            "--direction", "n_fis=down"]) == 0
+    with pytest.raises(SystemExit) as e:
+        obs_report.main(["regress", "--history", str(p),
+                         "--direction", "n_fis=sideways"])
+    assert e.value.code == 2
+
+
+def test_cli_history_markdown(tmp_path, capsys):
+    p = tmp_path / "h.jsonl"
+    _seed(p, [100.0, 104.0, 98.0])
+    assert obs_report.main(["history", "--history", str(p),
+                            "--format", "markdown"]) == 0
+    out = capsys.readouterr().out
+    assert "### perf history" in out
+    assert "| suite/key | dir | min | max |" in out
+    assert "`kernels/wall_ms`" in out and "| lower |" in out
+
+
+def test_cli_regress_markdown(tmp_path, capsys):
+    p = tmp_path / "h.jsonl"
+    _seed(p, [100.0, 104.0, 98.0, 200.0])
+    assert obs_report.main(["regress", "--history", str(p),
+                            "--format", "markdown"]) == 1
+    out = capsys.readouterr().out
+    assert "### perf regressions" in out
+    assert "**REGRESSION:** 1 key(s) degraded" in out
+    assert "`kernels/wall_ms`" in out
+    # the ok path renders too
+    _seed(p, [99.0])
+    p2 = tmp_path / "ok.jsonl"
+    _seed(p2, [100.0, 104.0, 98.0])
+    assert obs_report.main(["regress", "--history", str(p2),
+                            "--format", "markdown"]) == 0
+    assert "ok: no key degraded" in capsys.readouterr().out

@@ -5,7 +5,10 @@
 # + the observability gate (traced run record + regression-gated report)
 # + the serving SLO gate (load harness within SLO + overload self-test)
 # + the kernel-profile gate (all five families attributed, model-consistent)
-# + the perf-trajectory gate (BENCH_HISTORY.jsonl trend regression).
+# + the perf-trajectory gate (BENCH_HISTORY.jsonl trend regression)
+# + the doctor gate (critical path + speedup waterfall + injected-fault
+#   self-tests: forced skew and a starved store prefetcher must both be
+#   diagnosed, loudly).
 #
 #   tools/check.sh            # everything
 #   tools/check.sh --tests    # tier-1 pytest only
@@ -16,6 +19,7 @@
 #   tools/check.sh --obs      # observability suite + trace/report gates
 #   tools/check.sh --serve    # serving SLO gate + overload self-test
 #   tools/check.sh --profile  # kernel-profiled mine + attribution gates
+#   tools/check.sh --doctor   # performance-doctor diagnosis + self-tests
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -28,17 +32,19 @@ run_faults=1
 run_obs=1
 run_serve=1
 run_profile=1
+run_doctor=1
 case "${1:-}" in
-  --tests) run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_serve=0; run_profile=0 ;;
-  --bench) run_tests=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_serve=0; run_profile=0 ;;
-  --cluster) run_tests=0; run_bench=0; run_store=0; run_faults=0; run_obs=0; run_serve=0; run_profile=0 ;;
-  --store) run_tests=0; run_bench=0; run_cluster=0; run_faults=0; run_obs=0; run_serve=0; run_profile=0 ;;
-  --faults) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_obs=0; run_serve=0; run_profile=0 ;;
-  --obs) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_serve=0; run_profile=0 ;;
-  --serve) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_profile=0 ;;
-  --profile) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_serve=0 ;;
+  --tests) run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_serve=0; run_profile=0; run_doctor=0 ;;
+  --bench) run_tests=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_serve=0; run_profile=0; run_doctor=0 ;;
+  --cluster) run_tests=0; run_bench=0; run_store=0; run_faults=0; run_obs=0; run_serve=0; run_profile=0; run_doctor=0 ;;
+  --store) run_tests=0; run_bench=0; run_cluster=0; run_faults=0; run_obs=0; run_serve=0; run_profile=0; run_doctor=0 ;;
+  --faults) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_obs=0; run_serve=0; run_profile=0; run_doctor=0 ;;
+  --obs) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_serve=0; run_profile=0; run_doctor=0 ;;
+  --serve) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_profile=0; run_doctor=0 ;;
+  --profile) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_serve=0; run_doctor=0 ;;
+  --doctor) run_tests=0; run_bench=0; run_cluster=0; run_store=0; run_faults=0; run_obs=0; run_serve=0; run_profile=0 ;;
   "") ;;
-  *) echo "usage: tools/check.sh [--tests|--bench|--cluster|--store|--faults|--obs|--serve|--profile]" >&2; exit 2 ;;
+  *) echo "usage: tools/check.sh [--tests|--bench|--cluster|--store|--faults|--obs|--serve|--profile|--doctor]" >&2; exit 2 ;;
 esac
 
 if [[ $run_tests -eq 1 ]]; then
@@ -182,6 +188,68 @@ if [[ $run_profile -eq 1 ]]; then
     echo "profile gate FAILED: injected model mismatch was not detected" >&2
     exit 1
   fi
+fi
+
+if [[ $run_doctor -eq 1 ]]; then
+  echo "== doctor: critpath / speedup / doctor suites =="
+  python -m pytest -x -q tests/test_critpath.py tests/test_speedup.py \
+    tests/test_doctor.py
+  echo "== doctor: diagnosis of a healthy traced cluster mine =="
+  # the acceptance contract: a traced cluster mine must yield a critical-
+  # path table, a speedup waterfall whose terms sum to (ideal - measured)
+  # within 5%, and the imbalance + Thm 6.1 estimation findings keyed to
+  # the paper's own gauges
+  DOC_RUN="${DOC_RUN_DIR:-$(mktemp -d)/doc-run}"
+  python -m repro.launch.cluster_mine --db T0.5I0.024P8PL5TL8 \
+    --support 0.08 -P 4 --trace "$DOC_RUN"
+  python -m repro.launch.obs_report doctor "$DOC_RUN"
+  python -m repro.launch.obs_report doctor "$DOC_RUN" --format json \
+    > "$DOC_RUN/doctor.json"
+  python - "$DOC_RUN/doctor.json" <<'PY'
+import json, sys
+r = json.load(open(sys.argv[1]))
+assert r["critpath"]["table"], "no critical-path table"
+err = r["waterfall"]["additivity_err"]
+assert err < 0.05, f"waterfall terms do not sum to the gap: err={err:.3f}"
+rules = {f["rule"] for f in r["findings"]}
+need = {"cluster-imbalance", "thm61-estimation-error"}
+assert need <= rules, f"missing findings: {sorted(need - rules)}"
+print(f"doctor OK: {len(r['findings'])} finding(s), "
+      f"waterfall additivity err {err:.4f}")
+PY
+  echo "== doctor: forced skew must be diagnosed (gate exits non-zero) =="
+  # every class piled onto shard 0 with rebalancing pinned off: the doctor
+  # must blame the imbalance term and raise rebalance-not-engaging at
+  # error severity — a passing --gate here means the diagnosis is broken
+  SKEW_RUN="$(mktemp -d)/skew-run"
+  python -m repro.launch.cluster_mine --db T0.5I0.024P8PL5TL8 \
+    --support 0.08 -P 4 --force-skew --trace "$SKEW_RUN" >/dev/null
+  if python -m repro.launch.obs_report doctor "$SKEW_RUN" --gate \
+      >/dev/null 2>&1; then
+    echo "doctor gate FAILED: forced skew did not trip --gate" >&2
+    exit 1
+  fi
+  python -m repro.launch.obs_report doctor "$SKEW_RUN" --format json \
+    > "$SKEW_RUN/doctor.json"
+  grep -q '"rebalance-not-engaging"' "$SKEW_RUN/doctor.json" || {
+    echo "doctor gate FAILED: forced skew run has no" \
+      "rebalance-not-engaging finding" >&2
+    exit 1
+  }
+  echo "== doctor: starved store prefetcher must be diagnosed =="
+  # a 50 ms injected read delay against a 2-block host budget puts store
+  # reads on the critical path: the prefetch-stall finding must appear
+  STALL_RUN="$(mktemp -d)/stall-run"
+  REPRO_STORE_READ_DELAY_S=0.05 python -m repro.launch.mine \
+    --db T0.5I0.024P8PL5TL8 --support 0.08 --store "$(mktemp -d)" \
+    --blocktx 64 --budget-blocks 2 --trace "$STALL_RUN" >/dev/null
+  python -m repro.launch.obs_report doctor "$STALL_RUN" --format json \
+    > "$STALL_RUN/doctor.json"
+  grep -q '"prefetch-stall"' "$STALL_RUN/doctor.json" || {
+    echo "doctor gate FAILED: starved prefetcher run has no" \
+      "prefetch-stall finding" >&2
+    exit 1
+  }
 fi
 
 echo "check.sh: OK"
